@@ -1,0 +1,235 @@
+"""Benchmark harness — one function per paper table/figure + kernel micro.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's
+headline quantity).  Use --full for paper-scale replication (10 seeds,
+full instance counts); the default is a reduced-but-faithful pass sized
+for CI.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = []
+
+
+def _row(name: str, us: float, derived: str):
+    RESULTS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timed(fn, *args, repeat=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / repeat * 1e6
+
+
+# ---------------------------------------------------------------------- fig1
+def bench_fig1_bwa(full: bool):
+    """Fig. 1: BWA peak distribution + memory-over-time profile."""
+    from repro.traces import eager
+    wf = eager(40 if full else 20)
+    data = wf.generate(seed=0)
+    bwa = data["bwa"]
+
+    def stats():
+        peaks = np.asarray([e.peak for e in bwa])
+        e = bwa[0]
+        flat_frac = float(np.mean(e.mem < 0.6 * e.peak))
+        return peaks, flat_frac
+    (peaks, flat_frac), us = _timed(stats)
+    _row("fig1a_bwa_peak_median_gb", us, f"{np.median(peaks):.2f} (paper 10.6)")
+    _row("fig1b_bwa_flat_fraction", us, f"{flat_frac:.2f} (paper ~0.8)")
+
+
+# ---------------------------------------------------------------------- fig5
+def bench_fig5_overview(full: bool):
+    """Fig. 5: per-workflow instance counts and average peaks."""
+    from repro.traces import eager, sarek
+    for wff, n, paper in ((eager, 40 if full else 20, 2.31),
+                          (sarek, 70 if full else 24, 1.67)):
+        wf = wff(n)
+        data = wf.generate(seed=0)
+        peaks = [e.peak for ex in data.values() for e in ex]
+        cnt = sum(len(v) for v in data.values())
+        _row(f"fig5_{wf.name}_avg_peak_gb", 0.0,
+             f"{np.mean(peaks):.2f} (paper {paper}) n={cnt}")
+
+
+# ---------------------------------------------------------------------- fig6
+def bench_fig6_wastage(full: bool):
+    """Fig. 6: aggregated wastage per method x training fraction."""
+    from repro.sched.simulator import run_paper_experiment
+    from repro.traces import eager, sarek
+    seeds = range(10) if full else range(3)
+    for wff, n in ((eager, 30 if full else 18), (sarek, 40 if full else 20)):
+        wf = wff(n)
+        t0 = time.perf_counter()
+        table = run_paper_experiment(wf, seeds=seeds,
+                                     train_fracs=(0.25, 0.5, 0.75))
+        us = (time.perf_counter() - t0) * 1e6
+        for frac, per_m in table.items():
+            best_baseline = min(v for k, v in per_m.items()
+                                if not k.startswith("ks+"))
+            red = (best_baseline - per_m["ks+"]) / best_baseline
+            red_ppm = (per_m["ppm-improved"] - per_m["ks+"]) \
+                / per_m["ppm-improved"]
+            _row(f"fig6_{wf.name}_frac{int(frac*100)}_ks+_gbs",
+                 us / len(list(seeds)), f"{per_m['ks+']:.0f}")
+            _row(f"fig6_{wf.name}_frac{int(frac*100)}_reduction_vs_best",
+                 0.0, f"{100*red:.0f}% (paper 28-40%)")
+            _row(f"fig6_{wf.name}_frac{int(frac*100)}_reduction_vs_ppm",
+                 0.0, f"{100*red_ppm:.0f}% (paper 45-54%)")
+            if "ks+auto" in per_m:
+                red_auto = (per_m["ks+"] - per_m["ks+auto"]) / per_m["ks+"]
+                _row(f"fig6_{wf.name}_frac{int(frac*100)}_auto_k_vs_fixed",
+                     0.0, f"{100*red_auto:+.0f}% (beyond-paper: paper future work)")
+        os.makedirs("experiments/paper", exist_ok=True)
+        with open(f"experiments/paper/fig6_{wf.name}.json", "w") as f:
+            json.dump({str(k): v for k, v in table.items()}, f, indent=1)
+
+
+# ---------------------------------------------------------------------- fig7
+def bench_fig7_segments(full: bool):
+    """Fig. 7: KS+ wastage as a function of the number of segments."""
+    from repro.sched.simulator import evaluate_workflow
+    from repro.traces import eager
+    wf = eager(24 if full else 14)
+    out = {}
+    for k in (2, 3, 4, 6, 8):
+        res = evaluate_workflow(wf, seed=0, train_frac=0.5, k=k,
+                                methods=["ks+"])
+        out[k] = res.methods["ks+"].total_gbs
+        _row(f"fig7_eager_k{k}_gbs", 0.0, f"{out[k]:.0f}")
+    spread = (max(out.values()) - min(out.values())) / max(out.values())
+    _row("fig7_robustness_spread", 0.0,
+         f"{100*spread:.0f}% (paper: no significant outliers)")
+    os.makedirs("experiments/paper", exist_ok=True)
+    with open("experiments/paper/fig7.json", "w") as f:
+        json.dump(out, f, indent=1)
+
+
+# ---------------------------------------------------------------------- fig8
+def bench_fig8_per_task(full: bool):
+    """Fig. 8: per-task wastage in eager (KS+ vs best baseline)."""
+    from repro.sched.simulator import evaluate_workflow
+    from repro.traces import eager
+    wf = eager(36 if full else 30)
+    res = evaluate_workflow(wf, seed=0, train_frac=0.5, k=4,
+                            methods=["ks+", "k-segments-selective"])
+    ks = res.methods["ks+"].per_family_gbs
+    base = res.methods["k-segments-selective"].per_family_gbs
+    for fam in ks:
+        red = (base[fam] - ks[fam]) / base[fam] if base[fam] > 0 else 0.0
+        _row(f"fig8_eager_{fam}_gbs", 0.0,
+             f"{ks[fam]:.0f} ({100*red:+.0f}% vs k-seg-sel)")
+    bwa_red = (base["bwa"] - ks["bwa"]) / base["bwa"]
+    _row("fig8_bwa_reduction", 0.0, f"{100*bwa_red:.0f}% (paper 37-42%)")
+    os.makedirs("experiments/paper", exist_ok=True)
+    with open("experiments/paper/fig8.json", "w") as f:
+        json.dump({"ks+": ks, "k-segments-selective": base}, f, indent=1)
+
+
+# ------------------------------------------------------------------- kernels
+def bench_kernels(full: bool):
+    """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import flash_attention, ssd_pallas, wastage_eval
+    from repro.core.wastage import wastage_eval_ref
+    rng = np.random.default_rng(0)
+
+    q = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 64)), jnp.float32)
+    _, us = _timed(lambda: flash_attention(
+        q, k, v, causal=True, block_q=128, block_k=128,
+        interpret=True).block_until_ready())
+    _row("kernel_flash_attn_256_interpret", us, "validated-vs-ref")
+
+    X = jnp.asarray(rng.standard_normal((1, 256, 4, 32)) * 0.3, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal((1, 256, 4))) * 0.3,
+                    jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((1, 256, 1, 32)) * 0.3, jnp.float32)
+    _, us = _timed(lambda: ssd_pallas(X, A, Bm, Bm, chunk=64,
+                                      interpret=True)[0].block_until_ready())
+    _row("kernel_ssd_256_interpret", us, "validated-vs-ref")
+
+    B, T, kk = 64, 1024, 4
+    starts = np.sort(rng.uniform(0, 800, (B, kk)), 1)
+    starts[:, 0] = 0
+    peaks = np.sort(rng.uniform(1, 10, (B, kk)), 1)
+    mems = np.abs(rng.normal(3, 1, (B, T)))
+    lens = rng.integers(200, T, B)
+    _, us_k = _timed(lambda: np.asarray(
+        wastage_eval(starts, peaks, mems, lens, interpret=True)))
+    _, us_r = _timed(lambda: wastage_eval_ref(starts, peaks, mems, lens, 1.0))
+    _row("kernel_wastage_64x1024_interpret", us_k, f"ref_np={us_r:.0f}us")
+
+    # batched JAX segmentation (the fleet-scale path)
+    from repro.core import get_segments
+    pad = jnp.asarray(np.abs(rng.normal(3, 1, (128, 512))), jnp.float32)
+    lens2 = jnp.asarray(rng.integers(64, 512, 128), jnp.int32)
+    seg = jax.jit(jax.vmap(lambda m, l: get_segments(m, l, 4)))
+    jax.block_until_ready(seg(pad, lens2))  # compile
+    _, us = _timed(lambda: jax.block_until_ready(seg(pad, lens2)))
+    _row("core_segmentation_vmap128x512", us, "alg1-batched")
+
+
+# ------------------------------------------------------------------ roofline
+def bench_roofline_summary(full: bool):
+    """Summarize experiments/roofline/*.json into the §Roofline table."""
+    d = "experiments/roofline"
+    if not os.path.isdir(d):
+        _row("roofline_summary", 0.0,
+             "no artifacts (run python -m repro.launch.roofline)")
+        return
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        with open(os.path.join(d, fn)) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        rows.append(r)
+        _row(f"roofline_{r['cell']}", 0.0,
+             f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+             f"useful={r['useful_ratio']:.2f} "
+             f"peakGiB={r['peak_bytes_per_device']/2**30:.1f}")
+    if rows:
+        fracs = [r["roofline_fraction"] for r in rows]
+        _row("roofline_median_fraction", 0.0, f"{np.median(fracs):.3f}")
+
+
+BENCHES = {
+    "fig1": bench_fig1_bwa,
+    "fig5": bench_fig5_overview,
+    "fig6": bench_fig6_wastage,
+    "fig7": bench_fig7_segments,
+    "fig8": bench_fig8_per_task,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline_summary,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n](args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,10 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained.  [hf:databricks/dbrx-base; unverified]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352, head_dim=128,
+    n_experts=16, topk=4,
+    moe_local_dispatch=True,  # §Perf it4: shard_map dispatch
+)

@@ -1,0 +1,54 @@
+"""KS+ core — the paper's contribution as a composable JAX module.
+
+Public API:
+
+* :func:`get_segments` / :func:`get_segments_ref` — Algorithm 1.
+* :class:`AllocationPlan` — time-varying allocation step function.
+* :class:`KSPlus` — the full method (fit / predict / retry).
+* Baselines: :class:`TovarPPM`, :class:`PPMImproved`, :class:`KSegments`,
+  :class:`DefaultMethod`.
+* :func:`simulate_execution` — OOM/retry simulation + GB·s wastage.
+"""
+
+from repro.core.allocation import (
+    AllocationPlan,
+    alloc_at,
+    alloc_series,
+    first_violation,
+)
+from repro.core.baselines import DefaultMethod, KSegments, PPMImproved, TovarPPM
+from repro.core.ksplus import KSPlus, KSPlusAuto, MemoryPredictor
+from repro.core.predictor import (
+    LinReg,
+    SegmentModel,
+    fit_linreg,
+    fit_segment_model,
+    predict_plan,
+    predict_runtime,
+)
+from repro.core.retry import (
+    double_retry,
+    ksegments_partial_retry,
+    ksegments_selective_retry,
+    ksplus_retry,
+    max_machine_retry,
+)
+from repro.core.segmentation import get_segments, get_segments_ref, segments_to_starts
+from repro.core.wastage import (
+    AttemptRecord,
+    ExecutionResult,
+    simulate_execution,
+    wastage_eval_ref,
+)
+
+__all__ = [
+    "AllocationPlan", "alloc_at", "alloc_series", "first_violation",
+    "DefaultMethod", "KSegments", "PPMImproved", "TovarPPM",
+    "KSPlus", "KSPlusAuto", "MemoryPredictor",
+    "LinReg", "SegmentModel", "fit_linreg", "fit_segment_model",
+    "predict_plan", "predict_runtime",
+    "double_retry", "ksegments_partial_retry", "ksegments_selective_retry",
+    "ksplus_retry", "max_machine_retry",
+    "get_segments", "get_segments_ref", "segments_to_starts",
+    "AttemptRecord", "ExecutionResult", "simulate_execution", "wastage_eval_ref",
+]

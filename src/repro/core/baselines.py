@@ -1,0 +1,152 @@
+"""State-of-the-art baselines evaluated in the paper (§III-B).
+
+* :class:`TovarPPM` — Tovar et al. peak-probability sizing; on failure the
+  whole machine is allocated for the re-execution.
+* :class:`PPMImproved` — same first allocation, but doubling on failure.
+* :class:`KSegments` — the original k-Segments method (equal-length segments
+  over a predicted runtime) with the 'Selective' / 'Partial' retry variants.
+* :class:`DefaultMethod` — the workflow developers' static limits with the
+  standard retry-with-doubled-memory behaviour.
+
+All follow the ``fit / predict / retry`` protocol of
+:class:`repro.core.ksplus.MemoryPredictor`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.allocation import AllocationPlan
+from repro.core.predictor import LinReg, fit_linreg
+from repro.core.retry import (
+    double_retry,
+    ksegments_partial_retry,
+    ksegments_selective_retry,
+    max_machine_retry,
+)
+
+__all__ = ["TovarPPM", "PPMImproved", "KSegments", "DefaultMethod"]
+
+
+def _constant_plan(value: float) -> AllocationPlan:
+    return AllocationPlan(starts=np.zeros(1), peaks=np.asarray([value]))
+
+
+@dataclasses.dataclass
+class TovarPPM:
+    """Peak-probability model: pick the first allocation minimizing expected
+    allocated GB·s under the empirical peak distribution, assuming failures
+    surface at the end of a run (slow-peaks model) and are retried with the
+    machine's full memory."""
+
+    machine_memory: float = 128.0
+    name: str = "tovar-ppm"
+    _first_alloc: float = dataclasses.field(default=0.0, repr=False)
+
+    def fit(self, mems: Sequence[np.ndarray], dts, inputs) -> None:
+        peaks = np.asarray([float(np.max(m)) for m in mems])
+        runtimes = np.asarray([len(m) * dt for m, dt in zip(mems, dts)])
+        candidates = np.unique(peaks)
+        # cost(a) = sum_e a*r_e + sum_{p_e > a} M_max * r_e   (allocated GB·s)
+        fail = peaks[None, :] > candidates[:, None] + 1e-12
+        cost = candidates * runtimes.sum() + (
+            fail * (self.machine_memory * runtimes)[None, :]
+        ).sum(axis=1)
+        self._first_alloc = float(candidates[int(np.argmin(cost))])
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return _constant_plan(self._first_alloc)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        return max_machine_retry(plan, t_fail, used,
+                                 machine_memory=self.machine_memory)
+
+
+@dataclasses.dataclass
+class PPMImproved:
+    """Tovar-PPM's sizing with doubling instead of whole-machine retries."""
+
+    machine_memory: float = 128.0
+    name: str = "ppm-improved"
+    _inner: Optional[TovarPPM] = dataclasses.field(default=None, repr=False)
+
+    def fit(self, mems, dts, inputs) -> None:
+        self._inner = TovarPPM(machine_memory=self.machine_memory)
+        self._inner.fit(mems, dts, inputs)
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return self._inner.predict(input_size)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        return double_retry(plan, t_fail, used, cap=self.machine_memory)
+
+
+@dataclasses.dataclass
+class KSegments:
+    """The original k-Segments method [19] (the paper's direct predecessor).
+
+    Runtime is predicted by linear regression on input size and divided into
+    ``k`` *equal* segments; each segment's peak is predicted by its own
+    linear regression.  No monotonicity is enforced (that is a KS+ feature),
+    so the envelope can step down — exactly the failure mode KS+ removes.
+    """
+
+    k: int = 4
+    variant: str = "selective"  # or "partial"
+    peak_offset: float = 0.10
+    runtime_offset: float = 0.15
+    _runtime_reg: Optional[LinReg] = dataclasses.field(default=None, repr=False)
+    _peak_reg: Optional[LinReg] = dataclasses.field(default=None, repr=False)
+
+    @property
+    def name(self) -> str:
+        return f"k-segments-{self.variant}"
+
+    def fit(self, mems, dts, inputs) -> None:
+        runtimes = np.asarray([len(m) * dt for m, dt in zip(mems, dts)])
+        peaks = np.zeros((len(mems), self.k))
+        for e, m in enumerate(mems):
+            bounds = np.linspace(0, len(m), self.k + 1).astype(int)
+            for i in range(self.k):
+                lo, hi = bounds[i], max(bounds[i + 1], bounds[i] + 1)
+                peaks[e, i] = np.max(m[lo:hi])
+        I = np.asarray(inputs, np.float64)
+        self._runtime_reg = fit_linreg(I, runtimes)
+        self._peak_reg = fit_linreg(I, peaks)
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        rt = max(float(self._runtime_reg(input_size)), 0.0)
+        rt *= 1.0 - self.runtime_offset  # under-predict segment starts
+        starts = np.arange(self.k, dtype=np.float64) * (rt / self.k)
+        peaks = np.maximum(
+            self._peak_reg(input_size) * (1.0 + self.peak_offset), 1e-6
+        )
+        return AllocationPlan(starts=starts, peaks=peaks)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        if self.variant == "selective":
+            return ksegments_selective_retry(plan, t_fail, used,
+                                             margin=self.peak_offset)
+        return ksegments_partial_retry(plan, t_fail, used,
+                                       margin=self.peak_offset)
+
+
+@dataclasses.dataclass
+class DefaultMethod:
+    """Workflow developers' static limit + retry-with-doubled-memory."""
+
+    limit_gb: float
+    machine_memory: float = 128.0
+    name: str = "default"
+
+    def fit(self, mems, dts, inputs) -> None:  # nothing to learn
+        pass
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return _constant_plan(self.limit_gb)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        return double_retry(plan, t_fail, used, cap=self.machine_memory)

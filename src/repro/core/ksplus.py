@@ -1,0 +1,135 @@
+"""KS+ — the paper's method, as a composable module.
+
+Usage::
+
+    model = KSPlus(k=4)
+    model.fit(mems, dts, inputs)          # historical executions of one task
+    plan = model.predict(input_size)      # AllocationPlan (monotone step fn)
+    plan = model.retry(plan, t_fail, used)  # §II-C failure handling
+
+Every method (KS+ and the baselines in :mod:`repro.core.baselines`) follows
+this ``fit / predict / retry`` protocol, so the simulator and benchmark
+harness treat them uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.allocation import AllocationPlan
+from repro.core.predictor import (
+    SegmentModel,
+    fit_segment_model,
+    predict_plan,
+    predict_runtime,
+)
+from repro.core.retry import ksplus_retry
+
+__all__ = ["MemoryPredictor", "KSPlus", "KSPlusAuto"]
+
+
+class MemoryPredictor(Protocol):
+    """fit/predict/retry protocol shared by KS+ and all baselines."""
+
+    name: str
+
+    def fit(self, mems: Sequence[np.ndarray], dts: Sequence[float],
+            inputs: Sequence[float]) -> None: ...
+
+    def predict(self, input_size: float) -> AllocationPlan: ...
+
+    def retry(self, plan: AllocationPlan, t_fail: float,
+              used: float) -> AllocationPlan: ...
+
+
+@dataclasses.dataclass
+class KSPlus:
+    """The KS+ method (dynamic segments + per-segment regression + re-timing).
+
+    Attributes:
+      k:            number of segments (paper sweeps 2–8; Fig. 7 minimum at 6).
+      peak_offset:  over-prediction margin on segment peaks (+10 %).
+      start_offset: under-prediction margin on segment starts (−15 %).
+      last_peak_bump: peak increase when failing inside the last segment.
+    """
+
+    k: int = 4
+    peak_offset: float = 0.10
+    start_offset: float = 0.15
+    last_peak_bump: float = 0.20
+    name: str = "ks+"
+    _model: Optional[SegmentModel] = dataclasses.field(default=None, repr=False)
+
+    def fit(self, mems, dts, inputs) -> None:
+        self._model = fit_segment_model(
+            mems, dts, inputs, self.k,
+            peak_offset=self.peak_offset, start_offset=self.start_offset,
+        )
+
+    @property
+    def model(self) -> SegmentModel:
+        if self._model is None:
+            raise RuntimeError("KSPlus.fit() must be called before predict()")
+        return self._model
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return predict_plan(self.model, input_size)
+
+    def predict_runtime(self, input_size: float) -> float:
+        return predict_runtime(self.model, input_size)
+
+    def retry(self, plan: AllocationPlan, t_fail: float,
+              used: float) -> AllocationPlan:
+        return ksplus_retry(plan, t_fail, used,
+                            last_peak_bump=self.last_peak_bump)
+
+
+@dataclasses.dataclass
+class KSPlusAuto:
+    """KS+ with per-task automatic segment-count selection.
+
+    The paper's stated future work ("dynamically determine the optimal
+    number of segments for each task"): fit one KS+ model per candidate k,
+    replay the *training* executions through the OOM/retry simulator, and
+    keep the k with the lowest training wastage.  Costs |K| extra fits at
+    training time; prediction/retry are unchanged.
+    """
+
+    candidates: Sequence[int] = (2, 3, 4, 6, 8)
+    peak_offset: float = 0.10
+    start_offset: float = 0.15
+    last_peak_bump: float = 0.20
+    machine_memory: float = 128.0
+    name: str = "ks+auto"
+    chosen_k: Optional[int] = None
+    _model: Optional[KSPlus] = dataclasses.field(default=None, repr=False)
+
+    def fit(self, mems, dts, inputs) -> None:
+        from repro.core.wastage import simulate_execution  # cycle-free import
+        best = (np.inf, None, None)
+        for k in self.candidates:
+            m = KSPlus(k=k, peak_offset=self.peak_offset,
+                       start_offset=self.start_offset,
+                       last_peak_bump=self.last_peak_bump)
+            m.fit(mems, dts, inputs)
+            total = 0.0
+            for mem, dt, inp in zip(mems, dts, inputs):
+                res = simulate_execution(
+                    m.predict(inp), m.retry, mem, dt,
+                    machine_memory=self.machine_memory)
+                total += res.wastage_gbs
+            if total < best[0]:
+                best = (total, k, m)
+        _, self.chosen_k, self._model = best
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return self._model.predict(input_size)
+
+    def predict_runtime(self, input_size: float) -> float:
+        return self._model.predict_runtime(input_size)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        return self._model.retry(plan, t_fail, used)

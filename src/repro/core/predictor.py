@@ -1,0 +1,181 @@
+"""Per-segment linear-regression predictors (KS+ §II-B).
+
+For each task type we segment every historical execution with Algorithm 1
+(k segments), then fit — *per segment index i* — two univariate linear
+regressions on the execution's aggregated input size ``I``:
+
+    start_i ~ a_i * I + b_i        (segment start offset, seconds)
+    peak_i  ~ c_i * I + d_i        (segment peak memory, GB)
+
+Safety offsets (paper §II-B): peaks are over-predicted by ``peak_offset``
+(+10 %) and start times under-predicted by ``start_offset`` (−15 %); with a
+monotone envelope, stepping up early is always safe.
+
+The fitting path is batched JAX: all executions of a task are padded to a
+common length, segmented with a single ``vmap`` of
+:func:`repro.core.segmentation.get_segments`, and the 2k regressions are
+solved in closed form with one vectorized expression.  Thousands of task
+types / executions fit in a single XLA program — this is the TPU-native
+reformulation of the paper's per-task sklearn loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.allocation import AllocationPlan
+from repro.core.segmentation import get_segments
+
+__all__ = [
+    "LinReg",
+    "fit_linreg",
+    "SegmentModel",
+    "fit_segment_model",
+    "predict_plan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinReg:
+    """y ≈ slope * x + intercept (vectorized over leading dims)."""
+
+    slope: np.ndarray
+    intercept: np.ndarray
+
+    def __call__(self, x):
+        return self.slope * x + self.intercept
+
+
+def _lstsq_1d(x: jnp.ndarray, y: jnp.ndarray):
+    """Closed-form univariate least squares; degenerate x -> mean predictor."""
+    xm = jnp.mean(x)
+    ym = jnp.mean(y)
+    var = jnp.mean((x - xm) ** 2)
+    cov = jnp.mean((x - xm) * (y - ym))
+    slope = jnp.where(var > 1e-18, cov / jnp.maximum(var, 1e-18), 0.0)
+    intercept = ym - slope * xm
+    return slope, intercept
+
+
+# vmap over the segment axis: x is shared, y differs per segment.
+_fit_many = jax.jit(jax.vmap(_lstsq_1d, in_axes=(None, 1), out_axes=0))
+
+
+def fit_linreg(x: np.ndarray, y: np.ndarray) -> LinReg:
+    """Fit y[:, j] ~ x for each column j (or a single vector y)."""
+    x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+    y2 = jnp.atleast_2d(jnp.asarray(y, x.dtype))
+    if y2.shape[0] == x.shape[0]:
+        ycols = y2 if y2.ndim == 2 else y2[:, None]
+    else:
+        ycols = y2.T
+    slope, intercept = _fit_many(x, ycols)
+    slope = np.asarray(slope)
+    intercept = np.asarray(intercept)
+    if np.ndim(y) == 1:
+        slope, intercept = slope[0], intercept[0]
+    return LinReg(slope=slope, intercept=intercept)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentModel:
+    """Fitted per-segment regressions for one task type."""
+
+    k: int
+    start_reg: LinReg   # slopes/intercepts of shape (k,)
+    peak_reg: LinReg    # slopes/intercepts of shape (k,)
+    runtime_reg: LinReg  # scalar regression, used by the scheduler
+    peak_offset: float = 0.10
+    start_offset: float = 0.15
+
+
+def _segment_executions(mems: jnp.ndarray, lengths: jnp.ndarray, k: int):
+    """vmap Algorithm 1 across executions; return absolute starts + peaks."""
+    seg = jax.vmap(lambda m, l: get_segments(m, l, k))
+    S, P, n = seg(mems, lengths)  # (N,k), (N,k), (N,)
+    starts = jnp.cumsum(S, axis=1) - S  # samples
+    slot = jnp.arange(k)[None, :]
+    real = slot < n[:, None]
+    # Pad degenerate slots: start at end-of-run, peak = overall peak, so the
+    # regression sees "this execution never reached segment i" as "segment i
+    # starts when the run ends and needs no extra memory".
+    last_peak = jnp.max(P, axis=1, keepdims=True)
+    starts = jnp.where(real, starts, lengths[:, None])
+    P = jnp.where(real, P, last_peak)
+    return starts, P
+
+
+def fit_segment_model(
+    mems: Sequence[np.ndarray],
+    dts: Sequence[float],
+    inputs: Sequence[float],
+    k: int,
+    *,
+    peak_offset: float = 0.10,
+    start_offset: float = 0.15,
+) -> SegmentModel:
+    """Fit a :class:`SegmentModel` from raw execution traces.
+
+    Args:
+      mems:   per-execution memory traces (GB), possibly different lengths.
+      dts:    per-execution sampling periods (seconds).
+      inputs: per-execution aggregated input sizes (GB).
+      k:      number of segments.
+    """
+    if not (len(mems) == len(dts) == len(inputs)) or not mems:
+        raise ValueError("mems/dts/inputs must be equal-length and non-empty")
+    N = len(mems)
+    # Bucket the padded length to a power of two so repeated fits across
+    # families/splits reuse the same jitted segmentation program.
+    T = max(max(len(m) for m in mems), 64)
+    T = 1 << (T - 1).bit_length()
+    padded = np.zeros((N, T), np.float32)
+    lengths = np.zeros((N,), np.int32)
+    for i, m in enumerate(mems):
+        padded[i, : len(m)] = m
+        lengths[i] = len(m)
+
+    starts_smp, peaks = _segment_executions(
+        jnp.asarray(padded), jnp.asarray(lengths), k
+    )
+    dts_arr = np.asarray(dts, np.float64)
+    starts_sec = np.asarray(starts_smp, np.float64) * dts_arr[:, None]
+    runtimes = lengths.astype(np.float64) * dts_arr
+
+    I = np.asarray(inputs, np.float64)
+    start_reg = fit_linreg(I, starts_sec)
+    peak_reg = fit_linreg(I, np.asarray(peaks, np.float64))
+    runtime_reg = fit_linreg(I, runtimes)
+    return SegmentModel(
+        k=k,
+        start_reg=start_reg,
+        peak_reg=peak_reg,
+        runtime_reg=runtime_reg,
+        peak_offset=peak_offset,
+        start_offset=start_offset,
+    )
+
+
+def predict_plan(model: SegmentModel, input_size: float) -> AllocationPlan:
+    """Predict the KS+ allocation plan for a new execution.
+
+    Applies the safety offsets, pins the first segment to t=0, and enforces
+    monotonicity on both axes (cummax) so the plan never steps down.
+    """
+    starts = model.start_reg(input_size) * (1.0 - model.start_offset)
+    peaks = model.peak_reg(input_size) * (1.0 + model.peak_offset)
+    starts = np.maximum.accumulate(np.maximum(starts, 0.0))
+    starts[0] = 0.0
+    peaks = np.maximum.accumulate(np.maximum(peaks, 1e-6))
+    return AllocationPlan(starts=starts, peaks=peaks)
+
+
+def predict_runtime(model: SegmentModel, input_size: float,
+                    margin: float = 0.10) -> float:
+    """Scheduler-facing runtime estimate (over-predicted by ``margin``)."""
+    return float(max(model.runtime_reg(input_size), 0.0)) * (1.0 + margin)

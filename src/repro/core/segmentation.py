@@ -1,0 +1,180 @@
+"""KS+ dynamic segmentation (Algorithm 1 of the paper).
+
+A memory trace ``M[0..L)`` is compressed into at most ``k`` variable-length
+segments ``(S_i, P_i)`` (duration in samples, peak memory) forming a
+monotonically non-decreasing step function that upper-bounds the trace.
+
+Two phases:
+
+1. *Monotone compression*: a new segment starts exactly at each strict
+   running-maximum record of the trace; every other sample extends the
+   current segment.  This yields strictly increasing peaks and guarantees
+   ``M[t] <= P_seg(t)`` for every sample.
+
+   Note on the published pseudocode: Algorithm 1 as printed appends a new
+   segment when ``M_i < P_-1`` and extends when ``M_i >= P_-1``, which
+   contradicts the paper's own prose ("merge every segment with its
+   predecessor, if the peak value of the segment is smaller than the peak
+   value of the preceding segment ... until the constraint of being
+   monotonically increasing is fulfilled") and would produce non-monotone,
+   under-allocating envelopes.  We implement the prose semantics (the
+   branches of the printed pseudocode are evidently swapped).
+
+2. *Greedy merging*: while more than ``k`` segments remain, merge the
+   segment ``i`` with the smallest merge error
+   ``e_i = (P_{i+1} - P_i) * S_i`` into its successor (the merged segment
+   keeps the successor's larger peak).
+
+Two implementations are provided:
+
+* :func:`get_segments_ref` — plain-numpy oracle, variable-length output,
+  used by tests and by the non-batched control plane.
+* :func:`get_segments` — fixed-shape JAX implementation built from
+  ``lax`` control flow so it ``jit``s and ``vmap``s across thousands of
+  executions (the fleet-scale path).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["get_segments_ref", "get_segments", "segments_to_starts"]
+
+
+# ---------------------------------------------------------------------------
+# numpy reference (oracle)
+# ---------------------------------------------------------------------------
+
+
+def get_segments_ref(M: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference implementation of Algorithm 1.
+
+    Args:
+      M: 1-D array of memory samples (length >= 1).
+      k: maximum number of output segments (>= 1).
+
+    Returns:
+      ``(S, P)`` — integer durations (samples) and float peaks, with
+      ``len(S) == len(P) <= k``, ``sum(S) == len(M)``, ``P`` strictly
+      increasing, and ``P_seg(t) >= M[t]`` for all ``t``.
+    """
+    M = np.asarray(M, dtype=np.float64)
+    if M.ndim != 1 or M.size == 0:
+        raise ValueError("M must be a non-empty 1-D array")
+    if k < 1:
+        raise ValueError("k must be >= 1")
+
+    # Phase 1: monotone compression — new segment at each strict record.
+    S = [1]
+    P = [float(M[0])]
+    for m in M[1:]:
+        if m > P[-1]:
+            P.append(float(m))
+            S.append(1)
+        else:
+            S[-1] += 1
+
+    # Phase 2: greedy merging down to k segments.
+    while len(P) > k:
+        e = [(P[i + 1] - P[i]) * S[i] for i in range(len(P) - 1)]
+        idx = int(np.argmin(e))  # first minimum on ties, as in the paper
+        S[idx + 1] += S[idx]
+        del S[idx]
+        del P[idx]
+
+    return np.asarray(S, dtype=np.int64), np.asarray(P, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# JAX fixed-shape implementation
+# ---------------------------------------------------------------------------
+
+
+def _phase1_monotone(M: jnp.ndarray, valid: jnp.ndarray):
+    """Vectorized monotone compression over a padded trace.
+
+    Args:
+      M:     (T,) float samples, padding arbitrary.
+      valid: (T,) bool, True for real samples.  Must be a prefix mask.
+
+    Returns:
+      (P, S, n): (T,) peaks / (T,) durations compacted to the first ``n``
+      entries (rest zero-padded), and the segment count ``n``.
+    """
+    T = M.shape[0]
+    neg = jnp.asarray(-jnp.inf, M.dtype)
+    m = jnp.where(valid, M, neg)
+    run_max = jax.lax.associative_scan(jnp.maximum, m)
+    prev_max = jnp.concatenate([jnp.full((1,), neg, M.dtype), run_max[:-1]])
+    is_new = (m > prev_max) & valid
+    seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1  # -1 before first valid
+    seg_id = jnp.where(valid, seg_id, T - 1)  # dump padding into a sink slot
+
+    # Peak of each segment = value at its record point (= running max there).
+    P = jnp.zeros((T,), M.dtype).at[seg_id].max(jnp.where(valid, m, neg))
+    S = jnp.zeros((T,), jnp.int32).at[seg_id].add(valid.astype(jnp.int32))
+    n = jnp.sum(is_new.astype(jnp.int32))
+    # Clean the sink slot if no real segment landed there.
+    slot_valid = jnp.arange(T) < n
+    P = jnp.where(slot_valid, P, 0.0)
+    S = jnp.where(slot_valid, S, 0)
+    return P, S, n
+
+
+def _merge_step(state):
+    P, S, n, k = state
+    T = P.shape[0]
+    idx_range = jnp.arange(T - 1)
+    e = (P[1:] - P[:-1]) * S[:-1].astype(P.dtype)
+    e = jnp.where(idx_range < n - 1, e, jnp.inf)
+    idx = jnp.argmin(e)  # first min on ties (argmin is first-occurrence)
+    S = S.at[idx + 1].add(S[idx])
+    # Shift entries left over the removed slot.
+    ar = jnp.arange(T)
+    src = jnp.where(ar >= idx, ar + 1, ar)
+    src = jnp.clip(src, 0, T - 1)
+    P = jnp.where(ar < n - 1, P[src], 0.0)
+    S = jnp.where(ar < n - 1, S[src], 0)
+    return (P, S, n - 1, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def get_segments(M: jnp.ndarray, length: jnp.ndarray, k: int):
+    """Fixed-shape JAX version of Algorithm 1 (jit/vmap friendly).
+
+    Args:
+      M:      (T,) padded float trace.
+      length: scalar int — number of valid leading samples.
+      k:      static maximum segment count.
+
+    Returns:
+      ``(S, P, n)``: (k,) int32 durations, (k,) float peaks, scalar int32
+      actual segment count ``n <= k``.  Slots ``>= n`` are zero.
+    """
+    T = M.shape[0]
+    valid = jnp.arange(T) < length
+    P, S, n = _phase1_monotone(M, valid)
+
+    def cond(state):
+        _, _, cur, _ = state
+        return cur > k
+
+    P, S, n, _ = jax.lax.while_loop(cond, _merge_step, (P, S, n, jnp.int32(k)))
+    return S[:k], P[:k], n
+
+
+def segments_to_starts(S: jnp.ndarray, n: jnp.ndarray | int | None = None):
+    """Durations -> start offsets (samples). Slot i starts at sum(S[:i]).
+
+    Padding slots (>= n) get the total length so they never activate early.
+    """
+    starts = jnp.cumsum(S) - S  # exclusive prefix sum
+    if n is not None:
+        total = jnp.sum(S)
+        starts = jnp.where(jnp.arange(S.shape[0]) < n, starts, total)
+    return starts

@@ -1,0 +1,113 @@
+"""Memory-wastage metric (GB·s) and the OOM/retry simulation loop.
+
+Wastage of one task execution (paper §III-A): the integral of
+``allocated − used`` over the successful attempt **plus** the integral of
+``allocated`` over every failed attempt.  Failures happen at the first
+sample whose demand exceeds the active allocation (the simulated OOM
+killer), after which the method's retry strategy produces a new plan and the
+execution restarts from t = 0.
+
+The inner evaluation — step-function allocation vs. trace, summed — is the
+fleet-scale hot loop (methods × seeds × executions × samples); a Pallas
+kernel implementing the batched version lives in
+``repro.kernels.wastage`` with :func:`wastage_eval_ref` as its oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List
+
+import numpy as np
+
+from repro.core.allocation import AllocationPlan, alloc_series, first_violation
+
+__all__ = ["AttemptRecord", "ExecutionResult", "simulate_execution"]
+
+RetryFn = Callable[[AllocationPlan, float, float], AllocationPlan]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttemptRecord:
+    plan: AllocationPlan
+    failed_at: float  # seconds; -1 for the successful attempt
+    wastage_gbs: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionResult:
+    attempts: List[AttemptRecord]
+    wastage_gbs: float
+    succeeded: bool
+
+    @property
+    def num_retries(self) -> int:
+        return len(self.attempts) - 1
+
+
+def simulate_execution(
+    plan: AllocationPlan,
+    retry: RetryFn,
+    mem: np.ndarray,
+    dt: float,
+    *,
+    max_attempts: int = 25,
+    machine_memory: float = np.inf,
+) -> ExecutionResult:
+    """Run one task execution against a plan + retry strategy.
+
+    ``machine_memory`` caps every allocation (a node cannot grant more than
+    it has); a demand above the cap makes the execution unsatisfiable and is
+    reported as ``succeeded=False`` with the accumulated wastage.
+    """
+    mem = np.asarray(mem, dtype=np.float64)
+    attempts: List[AttemptRecord] = []
+    total = 0.0
+    for _ in range(max_attempts):
+        capped = plan.with_(peaks=np.minimum(plan.peaks, machine_memory))
+        v = first_violation(capped, mem, dt)
+        alloc = alloc_series(capped, len(mem), dt)
+        if v < 0:
+            w = float(np.sum(alloc - mem) * dt)
+            attempts.append(AttemptRecord(capped, -1.0, w))
+            return ExecutionResult(attempts, total + w, True)
+        # Failed attempt: everything allocated until the kill is wasted.
+        w = float(np.sum(alloc[: v + 1]) * dt)
+        total += w
+        t_fail = v * dt
+        attempts.append(AttemptRecord(capped, t_fail, w))
+        if np.max(mem) > machine_memory:
+            break  # no allocation can satisfy this job on this node class
+        plan = retry(capped, t_fail, float(mem[v]))
+    return ExecutionResult(attempts, total, False)
+
+
+def wastage_eval_ref(
+    starts: np.ndarray,
+    peaks: np.ndarray,
+    mems: np.ndarray,
+    lengths: np.ndarray,
+    dt: float,
+) -> np.ndarray:
+    """Batched successful-attempt wastage: oracle for the Pallas kernel.
+
+    Args:
+      starts: (B, k) plan start offsets (seconds).
+      peaks:  (B, k) plan peaks (GB).
+      mems:   (B, T) padded traces (GB).
+      lengths: (B,) valid sample counts.
+      dt:     sampling period.
+
+    Returns:
+      (B,) wastage in GB·s assuming each attempt succeeds (allocation
+      clamped from below by the trace, mirroring the kernel contract).
+    """
+    B, T = mems.shape
+    t = np.arange(T, dtype=np.float64)[None, :] * dt
+    # alloc[b, t] = peaks[b, max i: starts[b, i] <= t]
+    active = (starts[:, None, :] <= t[:, :, None]).astype(np.float64)
+    idx = np.maximum(active.cumsum(axis=2).argmax(axis=2), 0)
+    alloc = np.take_along_axis(peaks, idx.reshape(B, -1), axis=1).reshape(B, T)
+    alloc = np.maximum(alloc, mems)  # successful attempt ⇒ alloc >= used
+    valid = (np.arange(T)[None, :] < lengths[:, None]).astype(np.float64)
+    return ((alloc - mems) * valid).sum(axis=1) * dt

@@ -1,0 +1,5 @@
+"""Data pipeline substrate."""
+
+from repro.data.pipeline import SyntheticLMDataset, host_batch
+
+__all__ = ["SyntheticLMDataset", "host_batch"]

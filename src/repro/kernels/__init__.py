@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+* ``flash_attention`` — GQA flash attention (causal / windowed) forward.
+* ``ssd``             — Mamba2 chunked state-space-duality scan.
+* ``wastage``         — KS+ fleet-scale wastage evaluation.
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd wrapper with CPU interpret-mode fallback) and ``ref.py``
+(pure-jnp oracle used by the allclose test sweeps).
+"""
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.ssd.ops import ssd_pallas
+from repro.kernels.wastage.ops import wastage_eval
+
+__all__ = ["flash_attention", "ssd_pallas", "wastage_eval"]

@@ -1,0 +1,130 @@
+"""Flash-attention forward Pallas TPU kernel (GQA, causal / windowed).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) with the KV axis
+innermost ("arbitrary" semantics — sequential accumulation).  Online-softmax
+state (running max, normalizer, f32 accumulator) lives in VMEM scratch and
+is carried across KV blocks; the normalized output is written on the last
+visited KV block.
+
+BlockSpecs tile Q/K/V/O along the sequence axes only: each invocation sees
+``(block_q, head_dim)`` of Q and ``(block_k, head_dim)`` of K/V in VMEM.
+MXU alignment: block_q/block_k default to 128 and head_dim is padded to a
+multiple of 128 by ``ops.flash_attention`` when needed.
+
+Validated on CPU in interpret mode against ``ref.mha_reference``; on real
+TPU hardware the same ``pallas_call`` lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+_NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref,          # VMEM block refs
+    m_scr, l_scr, acc_scr,               # VMEM scratch
+    *, sm_scale: float, causal: bool, window: Optional[int],
+    block_q: int, block_k: int, seq_q: int, seq_kv: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale   # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        mask = (k_pos < seq_kv) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # Skip fully-masked blocks above the causal frontier.
+        pl.when(kj * block_k <= qi * block_q + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == nkv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q: jnp.ndarray,   # (B, H, Sq, hd)
+    k: jnp.ndarray,   # (B, K, Skv, hd)
+    v: jnp.ndarray,   # (B, K, Skv, hd)
+    *, causal: bool, window: Optional[int], sm_scale: float,
+    block_q: int = 128, block_k: int = 128,
+    seq_q: int, seq_kv: int, interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    nq = Sq // block_q
+    nk = k.shape[2] // block_k
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(
+        flash_attention_kernel, sm_scale=sm_scale, causal=causal,
+        window=window, block_q=block_q, block_k=block_k,
+        seq_q=seq_q, seq_kv=seq_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max
+            pltpu.VMEM((block_q,), jnp.float32),       # normalizer
+            pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles padding to MXU-aligned tiles (sequence to block multiples, head_dim
+to a lane multiple of 128), layout conversion from the model's
+(B, S, H, hd), and CPU fallback to interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_call
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,   # (B, Sq, H, hd) — model layout
+    k: jnp.ndarray,   # (B, Skv, K, hd)
+    v: jnp.ndarray,
+    *, causal: bool = True, window: Optional[int] = None,
+    block_q: int = 128, block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    sm_scale = 1.0 / hd ** 0.5
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+    pad_q = (-Sq) % bq
+    pad_kv = (-Skv) % bk
+    pad_hd = (-hd) % 128 if not interpret else 0  # lane alignment on TPU
+
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, Sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q or pad_hd:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, pad_hd)))
+    if pad_kv or pad_hd:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, pad_hd)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, pad_hd)))
+
+    out = flash_attention_call(
+        qt, kt, vt, causal=causal, window=window, sm_scale=sm_scale,
+        block_q=bq, block_k=bk, seq_q=Sq, seq_kv=Skv, interpret=interpret)
+    out = out[:, :, :Sq, :hd]
+    return jnp.moveaxis(out, 1, 2)  # back to (B, Sq, H, hd)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["mha_reference"]
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """Dense-softmax GQA attention.  q: (B,H,Sq,hd); k/v: (B,K,Skv,hd)."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    scale = sm_scale if sm_scale is not None else 1.0 / hd ** 0.5
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vx.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,97 @@
+"""Mamba2 SSD (state-space duality) Pallas TPU kernel.
+
+Grid: (batch, heads, num_chunks) with the chunk axis innermost and
+sequential — the recurrent state (head_dim × state) lives in VMEM scratch
+and is carried across chunk invocations, exactly the chunked dual form:
+quadratic attention-like compute inside a chunk, linear state passing
+between chunks.
+
+Per invocation the VMEM working set is
+``(chunk × P) x + (chunk × N) B,C + (chunk × chunk) decay + (P × N) state``
+— e.g. chunk=128, P=64, N=128 → ~200 KB, comfortably inside VMEM, with the
+two inner matmuls ((chunk×N)@(N×chunk) and (chunk×chunk)@(chunk×P)) shaped
+for the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_kernel", "ssd_call"]
+
+
+def ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr,
+               *, chunk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (chunk, P)
+    a = a_ref[0, 0].astype(jnp.float32)          # (chunk,)
+    b = b_ref[0, 0].astype(jnp.float32)          # (chunk, N)
+    c = c_ref[0, 0].astype(jnp.float32)          # (chunk, N)
+
+    cum = jnp.cumsum(a)                          # (chunk,)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    s = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (chunk,chunk)
+    y_diag = jax.lax.dot_general(s * L, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                       # (P, N)
+    y_off = jax.lax.dot_general(c * jnp.exp(cum)[:, None], state,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (chunk,P)
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)        # (chunk,)
+    inc = jax.lax.dot_general(x, b * decay_to_end[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(cum[-1]) + inc
+    st_ref[0, 0] = state_scr[...].astype(st_ref.dtype)
+
+
+def ssd_call(x, a, b, c, *, chunk: int, n_groups: int,
+             interpret: bool = False):
+    """x: (B,H,S,P); a: (B,H,S); b,c: (B,G,S,N).  Returns (y, final_state)."""
+    B, H, S, P = x.shape
+    N = b.shape[-1]
+    rep = H // n_groups
+    nc = S // chunk
+    grid = (B, H, nc)
+
+    kernel = functools.partial(ssd_kernel, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bi, h, j: (bi, h, j, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, h, j: (bi, h, j)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bi, h, j, rep=rep: (bi, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda bi, h, j, rep=rep: (bi, h // rep, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bi, h, j: (bi, h, j, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bi, h, j: (bi, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)
+    return y, st

@@ -1,0 +1,54 @@
+"""jit'd public wrapper for the SSD kernel (model layout, padding, fallback)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_call
+
+__all__ = ["ssd_pallas"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(X, A, Bm, Cm, chunk: int = 128, interpret=None,
+               initial_state=None):
+    """Drop-in for ``repro.models.mamba2.ssd_chunked`` (model layout).
+
+    X: (B,S,H,P) — inputs pre-multiplied by dt; A: (B,S,H) log-decays;
+    Bm/Cm: (B,S,G,N).  Returns (Y (B,S,H,P), final_state (B,H,P,N)).
+    ``initial_state`` is folded in as a virtual prefix via the state
+    linearity (state' = decay * init + contribution).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, P = X.shape
+    G = Bm.shape[2]
+    pad = (-S) % chunk
+    x = jnp.moveaxis(X, 1, 2)          # (B,H,S,P)
+    a = jnp.moveaxis(A, 1, 2)          # (B,H,S)
+    b = jnp.moveaxis(Bm, 1, 2)         # (B,G,S,N)
+    c = jnp.moveaxis(Cm, 1, 2)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    y, st = ssd_call(x, a, b, c, chunk=chunk, n_groups=G,
+                     interpret=interpret)
+    y = jnp.moveaxis(y[:, :, :S], 1, 2)
+    if initial_state is not None:
+        # linearity: y += C_t * exp(cumsum A) * init ; final += decay * init
+        cum = jnp.cumsum(jnp.moveaxis(A, 1, 2).astype(jnp.float32), axis=-1)
+        rep = H // G
+        Ch = jnp.repeat(Cm, rep, axis=2)  # (B,S,H,N)
+        w = jnp.exp(cum)                  # (B,H,S)
+        extra = jnp.einsum("bshn,bhpn,bhs->bshp", Ch.astype(jnp.float32),
+                           initial_state.astype(jnp.float32),
+                           jnp.moveaxis(w, 1, 1))
+        y = y + extra.astype(y.dtype)
+        st = st + initial_state.astype(st.dtype) * jnp.exp(
+            cum[..., -1])[..., None, None]
+    return y, st

@@ -1,0 +1,19 @@
+"""Oracle for the SSD kernel: the model's own chunked-jnp implementation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+__all__ = ["ssd_reference"]
+
+
+def ssd_reference(x, a, b, c, *, chunk: int):
+    """Kernel-layout wrapper.  x: (B,H,S,P); a: (B,H,S); b,c: (B,G,S,N)."""
+    X = jnp.moveaxis(x, 1, 2)           # (B,S,H,P)
+    A = jnp.moveaxis(a, 1, 2)           # (B,S,H)
+    Bm = jnp.moveaxis(b, 1, 2)          # (B,S,G,N)
+    Cm = jnp.moveaxis(c, 1, 2)
+    Y, final = ssd_chunked(X, A, Bm, Cm, chunk)
+    return jnp.moveaxis(Y, 1, 2), final  # (B,H,S,P), (B,H,P,N)

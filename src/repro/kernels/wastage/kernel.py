@@ -1,0 +1,81 @@
+"""Batched wastage-evaluation Pallas TPU kernel.
+
+The fleet-scale evaluation hot loop of KS+: for thousands of (execution
+trace × allocation plan) pairs, integrate ``allocated − used`` over time.
+Each grid point evaluates one execution block: the step-function allocation
+is reconstructed in VMEM from the (k,) segment starts/peaks via a one-hot
+interval comparison (k ≤ 16, so the (T_block, k) compare/select stays in
+registers), clamped from below by the trace (successful-attempt contract),
+masked by validity, and reduced.
+
+Grid: (num_execs, num_time_blocks); the scalar accumulator per execution
+lives in VMEM scratch and is flushed on the last time block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wastage_kernel", "wastage_call"]
+
+
+def wastage_kernel(starts_ref, peaks_ref, mem_ref, len_ref, out_ref, acc_scr,
+                   *, block_t: int, dt: float):
+    tb = pl.program_id(1)
+    ntb = pl.num_programs(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    starts = starts_ref[0].astype(jnp.float32)      # (k,)
+    peaks = peaks_ref[0].astype(jnp.float32)        # (k,)
+    mem = mem_ref[0].astype(jnp.float32)            # (block_t,)
+    length = len_ref[0]                             # scalar int32
+
+    t_idx = tb * block_t + jax.lax.iota(jnp.int32, block_t)
+    t = t_idx.astype(jnp.float32) * dt
+    # alloc(t) = peaks[max { i : starts_i <= t }] — one-hot interval select.
+    active = starts[None, :] <= t[:, None]          # (block_t, k)
+    # last active index == argmax of cumulative count; peaks are monotone
+    # for KS+ but NOT for k-Segments, so select by interval, not by max.
+    nxt = jnp.concatenate([starts[1:], jnp.full((1,), jnp.inf)])
+    in_seg = active & (t[:, None] < nxt[None, :])
+    alloc = jnp.sum(jnp.where(in_seg, peaks[None, :], 0.0), axis=1)
+    alloc = jnp.where(jnp.any(in_seg, axis=1), alloc, peaks[0])
+    alloc = jnp.maximum(alloc, mem)                 # successful attempt
+    valid = (t_idx < length).astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] + jnp.sum((alloc - mem) * valid) * dt
+
+    @pl.when(tb == ntb - 1)
+    def _flush():
+        out_ref[0] = acc_scr[...].astype(out_ref.dtype)
+
+
+def wastage_call(starts, peaks, mems, lengths, *, dt: float,
+                 block_t: int = 512, interpret: bool = False):
+    """starts/peaks: (B, k); mems: (B, T); lengths: (B,).  Returns (B,)."""
+    B, k = starts.shape
+    T = mems.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    grid = (B, T // block_t)
+    kernel = functools.partial(wastage_kernel, block_t=block_t, dt=dt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, block_t), lambda b, t: (b, t)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, t: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((), jnp.float32)],
+        interpret=interpret,
+    )(starts, peaks, mems, lengths)

@@ -1,0 +1,32 @@
+"""jit'd wrapper for the batched wastage kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wastage.kernel import wastage_call
+
+__all__ = ["wastage_eval"]
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block_t", "interpret"))
+def wastage_eval(starts, peaks, mems, lengths, dt: float = 1.0,
+                 block_t: int = 512, interpret=None):
+    """Batched successful-attempt wastage in GB·s.
+
+    starts/peaks: (B, k) float; mems: (B, T) float; lengths: (B,) int32.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T = mems.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        mems = jnp.pad(mems, ((0, 0), (0, pad)))
+    return wastage_call(
+        jnp.asarray(starts, jnp.float32), jnp.asarray(peaks, jnp.float32),
+        jnp.asarray(mems, jnp.float32), jnp.asarray(lengths, jnp.int32),
+        dt=dt, block_t=bt, interpret=interpret)

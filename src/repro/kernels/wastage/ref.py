@@ -1,0 +1,5 @@
+"""Oracle for the wastage kernel: the core's numpy implementation."""
+
+from repro.core.wastage import wastage_eval_ref
+
+__all__ = ["wastage_eval_ref"]

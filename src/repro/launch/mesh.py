@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ("data", "model"); two pods: (2, 16, 16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh():
+    """Degenerate mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class HW:
+    """TPU v5e-class hardware constants for the roofline model."""
+
+    PEAK_FLOPS_BF16 = 197e12   # per chip
+    HBM_BW = 819e9             # bytes/s per chip
+    ICI_BW = 50e9              # bytes/s per link
+    HBM_BYTES = 16 * 2**30     # per chip
+    CHIPS_PER_POD = 256

@@ -1,0 +1,111 @@
+"""Assigned input shapes, per-cell applicability, and dry-run input specs.
+
+Shapes (per the assignment):
+  train_4k    — seq 4,096  × global_batch 256   (training step)
+  prefill_32k — seq 32,768 × global_batch 32    (inference prefill / encode)
+  decode_32k  — 1 new token, KV len 32,768, global_batch 128
+  long_500k   — 1 new token, context 524,288, global_batch 1
+
+Cell policy (documented in DESIGN.md §Shape×arch cell policy):
+  * long_500k runs only for sub-quadratic families (ssm, hybrid); the
+    hybrid's shared attention uses a 4,096 sliding window at 500k.
+  * decode shapes are skipped for encoder-only archs (hubert).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache_shapes
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeCell", "SHAPES", "cell_supported", "cfg_for_cell",
+           "input_specs", "step_kind"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    cell = SHAPES[shape]
+    if cfg.is_encoder_only and cell.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("pure full-attention arch: 512k dense decode is "
+                       "O(seq^2)/token with no sub-quadratic path")
+    return True, ""
+
+
+def cfg_for_cell(cfg: ModelConfig, shape: str) -> ModelConfig:
+    """Per-cell config adaptation (documented): hybrid long-context decode
+    windows its shared attention to 4,096."""
+    if shape == "long_500k" and cfg.family == "hybrid":
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def step_kind(cfg: ModelConfig, shape: str) -> str:
+    cell = SHAPES[shape]
+    if cell.kind == "prefill" and cfg.is_encoder_only:
+        return "encode"
+    return cell.kind
+
+
+def _token_specs(cfg: ModelConfig, batch: int, seq: int,
+                 with_labels: bool) -> Dict:
+    i32 = jnp.int32
+    out: Dict = {}
+    if cfg.family in ("vlm", "audio"):
+        out["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             jnp.bfloat16)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), i32)
+    if cfg.mrope_sections is not None:
+        out["positions"] = jax.ShapeDtypeStruct((batch, seq, 3), i32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape} unsupported: {why}")
+    cell = SHAPES[shape]
+    cfg = cfg_for_cell(cfg, shape)
+    kind = step_kind(cfg, shape)
+    if kind == "train":
+        return {"batch": _token_specs(cfg, cell.batch, cell.seq, True)}
+    if kind in ("prefill", "encode"):
+        return {"batch": _token_specs(cfg, cell.batch, cell.seq, False)}
+    # decode: one new token against a cache of capacity `seq`
+    i32 = jnp.int32
+    batch: Dict = {}
+    if cfg.family == "vlm":
+        batch["embeds"] = jax.ShapeDtypeStruct((cell.batch, 1, cfg.d_model),
+                                               jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((cell.batch,), i32)
+    return {
+        "batch": batch,
+        "cache": cache_shapes(cfg, cell.batch, cell.seq),
+        "pos": jax.ShapeDtypeStruct((cell.batch,), i32),
+    }

@@ -1,0 +1,20 @@
+"""Model zoo: dense/MoE/SSM/hybrid/VLM/audio transformer families."""
+
+from repro.models.config import ModelConfig, SMOKE_OVERRIDES
+from repro.models.model import (
+    cache_shapes,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    param_defs,
+    param_shapes,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "SMOKE_OVERRIDES",
+    "cache_shapes", "decode_step", "forward_train", "init_cache",
+    "init_params", "param_defs", "param_shapes", "param_specs", "prefill",
+]

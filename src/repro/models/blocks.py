@@ -1,0 +1,268 @@
+"""Per-family block definitions: parameter defs + apply functions.
+
+Block kinds:
+  * dense  — pre-norm GQA attention + SwiGLU MLP (optional qk-norm, M-RoPE)
+  * moe    — pre-norm GQA attention + top-k MoE MLP
+  * mamba2 — pre-norm Mamba2 (SSD) mixer
+Hybrid models (Zamba2) compose scanned mamba2 blocks with one weight-shared
+dense block applied every ``shared_attn_every`` layers (see model.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    append_kv,
+    chunked_gqa_attention,
+    decode_gqa_attention,
+)
+from repro.models.layers import apply_mrope, apply_rope, rmsnorm, swiglu
+from repro.models.mamba2 import mamba2_decode, mamba2_mixer
+from repro.models.moe import moe_block, moe_block_local
+from repro.models.params import ParamDef
+from repro.launch.partitioning import logical_constraint
+
+__all__ = [
+    "attn_param_defs", "mlp_param_defs", "moe_param_defs", "mamba2_param_defs",
+    "dense_block_defs", "moe_block_defs", "mamba2_block_defs",
+    "apply_attn", "apply_attn_decode",
+    "apply_dense_block", "apply_dense_block_decode",
+    "apply_moe_block", "apply_moe_block_decode",
+    "apply_mamba2_block", "apply_mamba2_block_decode",
+    "CONV_KW",
+]
+
+CONV_KW = 4  # Mamba2 depthwise conv kernel width
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def attn_param_defs(cfg) -> Dict[str, ParamDef]:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    p = {
+        "ln": ParamDef((D,), (None,), init="ones"),
+        "wq": ParamDef((D, H * hd), ("embed_fsdp", "heads")),
+        "wk": ParamDef((D, K * hd), ("embed_fsdp", "heads")),
+        "wv": ParamDef((D, K * hd), ("embed_fsdp", "heads")),
+        "wo": ParamDef((H * hd, D), ("heads", "embed_fsdp"),
+                       init_scale=out_scale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        p["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return p
+
+
+def mlp_param_defs(cfg) -> Dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln": ParamDef((D,), (None,), init="ones"),
+        "w_gate": ParamDef((D, F), ("embed_fsdp", "ff")),
+        "w_up": ParamDef((D, F), ("embed_fsdp", "ff")),
+        "w_down": ParamDef((F, D), ("ff", "embed_fsdp"), init_scale=out_scale),
+    }
+
+
+def moe_param_defs(cfg) -> Dict[str, ParamDef]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "ln": ParamDef((D,), (None,), init="ones"),
+        "router": ParamDef((D, E), ("embed_fsdp", None)),
+        "w_gate": ParamDef((E, D, F), ("expert", "embed_fsdp", None)),
+        "w_up": ParamDef((E, D, F), ("expert", "embed_fsdp", None)),
+        "w_down": ParamDef((E, F, D), ("expert", None, "embed_fsdp"),
+                           init_scale=out_scale),
+    }
+
+
+def mamba2_param_defs(cfg) -> Dict[str, ParamDef]:
+    D, din = cfg.d_model, cfg.d_inner
+    H, P, G, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_groups, cfg.ssm_state
+    conv_dim = din + 2 * G * N
+    zdim = 2 * din + 2 * G * N + H
+    out_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+
+    def a_log_init(key):
+        return jnp.log(jnp.linspace(1.0, 16.0, H))
+
+    def dt_bias_init(key):
+        dt = jnp.exp(jax.random.uniform(
+            key, (H,), minval=math.log(1e-3), maxval=math.log(1e-1)))
+        return dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+
+    return {
+        "ln": ParamDef((D,), (None,), init="ones"),
+        "in_proj": ParamDef((D, zdim), ("embed_fsdp", "ssm_inner")),
+        "conv_w": ParamDef((conv_dim, CONV_KW), ("ssm_inner", None),
+                           init_scale=0.1),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), init="zeros"),
+        "dt_bias": ParamDef((H,), (None,), custom_init=dt_bias_init),
+        "A_log": ParamDef((H,), (None,), custom_init=a_log_init),
+        "D": ParamDef((H,), (None,), init="ones"),
+        "norm_scale": ParamDef((din,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamDef((din, D), ("ssm_inner", "embed_fsdp"),
+                             init_scale=out_scale),
+    }
+
+
+def dense_block_defs(cfg) -> Dict[str, Dict[str, ParamDef]]:
+    return {"attn": attn_param_defs(cfg), "mlp": mlp_param_defs(cfg)}
+
+
+def moe_block_defs(cfg) -> Dict[str, Dict[str, ParamDef]]:
+    return {"attn": attn_param_defs(cfg), "moe": moe_param_defs(cfg)}
+
+
+def mamba2_block_defs(cfg) -> Dict[str, Dict[str, ParamDef]]:
+    return {"mamba": mamba2_param_defs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# apply functions
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, cfg, h):
+    B, S, _ = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dtype = h.dtype
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(dtype)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"].astype(dtype)).reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"].astype(dtype)).reshape(B, S, K, hd)
+    q = logical_constraint(q, "batch", None, "q_heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    v = logical_constraint(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope(cfg, x, positions):
+    if cfg.mrope_sections is not None:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def apply_attn(
+    p: Dict, cfg, h: jnp.ndarray, positions: jnp.ndarray,
+    *, window: Optional[int] = None, return_kv: bool = False,
+):
+    """Attention sublayer (pre-norm, residual) for train/prefill.
+
+    Set ``return_kv`` to also get (k, v) back for KV-cache construction.
+    """
+    resid = h
+    h = rmsnorm(h, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    out = chunked_gqa_attention(
+        q, k, v, causal=cfg.causal, window=window,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    B, S, _, _ = out.shape
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(h.dtype))
+    return resid + out, ((k, v) if return_kv else None)
+
+
+def apply_attn_decode(
+    p: Dict, cfg, h: jnp.ndarray, pos: jnp.ndarray,
+    cache_k: jnp.ndarray, cache_v: jnp.ndarray, kv_positions: jnp.ndarray,
+    *, window: Optional[int] = None,
+):
+    """Decode attention sublayer.  ``kv_positions`` must already include the
+    current token (updated once per step outside the layer scan)."""
+    resid = h
+    h = rmsnorm(h, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h)
+    positions = pos[:, None]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos[:, None, None], (pos.shape[0], 1, 3))
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    cache_k, cache_v = append_kv(cache_k, cache_v, k, v, pos)
+    out = decode_gqa_attention(
+        q, cache_k, cache_v, kv_positions, pos,
+        window=window, chunk_kv=cfg.attn_chunk_kv)
+    B = out.shape[0]
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(h.dtype))
+    return resid + out, cache_k, cache_v
+
+
+def apply_dense_block(p, cfg, h, positions, window=None, return_kv=False):
+    h, kv = apply_attn(p["attn"], cfg, h, positions,
+                       window=window, return_kv=return_kv)
+    resid = h
+    hn = rmsnorm(h, p["mlp"]["ln"], cfg.norm_eps)
+    h = resid + swiglu(hn, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    return h, kv
+
+
+def apply_dense_block_decode(p, cfg, h, pos, cache_k, cache_v, kv_positions,
+                             window=None):
+    h, cache_k, cache_v = apply_attn_decode(
+        p["attn"], cfg, h, pos, cache_k, cache_v, kv_positions, window=window)
+    resid = h
+    hn = rmsnorm(h, p["mlp"]["ln"], cfg.norm_eps)
+    h = resid + swiglu(hn, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    return h, cache_k, cache_v
+
+
+def apply_moe_block(p, cfg, h, positions, window=None, return_kv=False):
+    h, kv = apply_attn(p["attn"], cfg, h, positions,
+                       window=window, return_kv=return_kv)
+    resid = h
+    hn = rmsnorm(h, p["moe"]["ln"], cfg.norm_eps)
+    moe_fn = moe_block_local if cfg.moe_local_dispatch else moe_block
+    out, aux = moe_fn(
+        hn, p["moe"]["router"], p["moe"]["w_gate"], p["moe"]["w_up"],
+        p["moe"]["w_down"], topk=cfg.topk,
+        capacity_factor=cfg.capacity_factor)
+    return resid + out, kv, aux
+
+
+def apply_moe_block_decode(p, cfg, h, pos, cache_k, cache_v, kv_positions,
+                           window=None):
+    h, cache_k, cache_v = apply_attn_decode(
+        p["attn"], cfg, h, pos, cache_k, cache_v, kv_positions, window=window)
+    resid = h
+    hn = rmsnorm(h, p["moe"]["ln"], cfg.norm_eps)
+    moe_fn = moe_block_local if cfg.moe_local_dispatch else moe_block
+    out, _ = moe_fn(
+        hn, p["moe"]["router"], p["moe"]["w_gate"], p["moe"]["w_up"],
+        p["moe"]["w_down"], topk=cfg.topk,
+        capacity_factor=cfg.capacity_factor)
+    return resid + out, cache_k, cache_v
+
+
+def apply_mamba2_block(p, cfg, h, initial_state=None, ssd_impl=None):
+    """Train/prefill Mamba2 block. Returns (h, final_ssm_state, conv_tail)."""
+    resid = h
+    hn = rmsnorm(h, p["mamba"]["ln"], cfg.norm_eps)
+    kwargs = {} if ssd_impl is None else {"ssd_impl": ssd_impl}
+    out, final_state, conv_tail = mamba2_mixer(
+        p["mamba"], cfg, hn, initial_state=initial_state, **kwargs)
+    return resid + out, final_state, conv_tail
+
+
+def apply_mamba2_block_decode(p, cfg, h, conv_state, ssm_state):
+    resid = h
+    hn = rmsnorm(h, p["mamba"]["ln"], cfg.norm_eps)
+    out, new_conv, new_ssm = mamba2_decode(
+        p["mamba"], cfg, hn, conv_state, ssm_state)
+    return resid + out, new_conv, new_ssm

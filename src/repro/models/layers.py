@@ -1,0 +1,84 @@
+"""Shared layers: norms, rotary embeddings (RoPE / M-RoPE), MLP, embeddings."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm", "swiglu", "rope_frequencies", "apply_rope", "apply_mrope",
+    "embed_lookup",
+]
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm in f32 with cast back to the input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    dtype = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(dtype))
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (head_dim/2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): the rotary dimensions are partitioned into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, hd); positions3: (B, S, 3) int32; sum(sections) == hd // 2.
+    """
+    hd = x.shape[-1]
+    if sum(sections) != hd // 2:
+        raise ValueError(f"M-RoPE sections {sections} must sum to {hd // 2}")
+    inv = rope_frequencies(hd, theta)  # (hd/2,)
+    # section id per rotary dim
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),  # (B, S, 3)
+        jnp.broadcast_to(sec_id[None, None, :],
+                         positions3.shape[:2] + (hd // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B, S, hd/2): position id per rotary dim
+    ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray,
+                 dtype: jnp.dtype) -> jnp.ndarray:
+    """Embedding gather with compute-dtype cast."""
+    return jnp.take(table, tokens, axis=0).astype(dtype)

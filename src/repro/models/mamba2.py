@@ -1,0 +1,201 @@
+"""Mamba2 (state-space duality) mixer: chunked SSD + causal conv + decode.
+
+The chunked SSD here is the pure-jnp reference form of the algorithm
+(quadratic within chunks, decay-weighted state passing across chunks) and
+doubles as the oracle for the Pallas kernel in ``repro.kernels.ssd``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+__all__ = ["segsum", "ssd_chunked", "ssd_decode_step", "causal_conv1d",
+           "conv_decode_step", "mamba2_mixer", "mamba2_decode"]
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < s <= i} a_s."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    out = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    X: jnp.ndarray,   # (B, S, H, P)  — inputs pre-multiplied by dt
+    A: jnp.ndarray,   # (B, S, H)     — log-decay increments (dt * A, A < 0)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (Y (B,S,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = X.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    pad = (-l) % chunk
+    if pad:  # zero-pad: X=0 adds nothing, A=0 keeps the state (exp(0)=1)
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        A = jnp.pad(A, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out_len = l
+        l = l + pad
+    else:
+        out_len = l
+    nc = l // chunk
+    rep = h // g
+
+    Xc = X.reshape(b, nc, chunk, h, p)
+    Ac = A.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    Bc = jnp.repeat(Bm.reshape(b, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    A_cs = jnp.cumsum(Ac, axis=-1)                        # (b,h,c,l)
+    L = jnp.exp(segsum(Ac))                               # (b,h,c,l,l)
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Cc, Bc, L, Xc)
+
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)         # (b,h,c,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bc, decay_states, Xc)
+
+    init = (jnp.zeros((b, 1, h, p, n), X.dtype) if initial_state is None
+            else initial_state[:, None].astype(X.dtype))
+    states = jnp.concatenate([init, states], axis=1)      # (b,c+1,h,p,n)
+    chunk_decay = jnp.exp(segsum(jnp.pad(A_cs[..., -1], ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", chunk_decay, states)
+    states, final = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(A_cs)                       # (b,h,c,l)
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Cc, states, state_decay_out)
+    Y = (Y_diag + Y_off).reshape(b, l, h, p)[:, :out_len]
+    return Y, final
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, P, N)
+    x: jnp.ndarray,      # (B, H, P)   — NOT pre-multiplied by dt
+    dt: jnp.ndarray,     # (B, H)
+    A: jnp.ndarray,      # (H,)
+    Bm: jnp.ndarray,     # (B, G, N)
+    Cm: jnp.ndarray,     # (B, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One recurrent step. Returns (y (B,H,P), new_state)."""
+    b, h, p, n = state.shape
+    g = Bm.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])     # (B, H)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, x)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new_state)
+    return y, new_state
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  init_state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv, kernel size KW. x: (B,S,C), w: (C,KW), b: (C,)."""
+    kw = w.shape[1]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[None, None, :, i].astype(x.dtype)
+            for i in range(kw))
+    return y + b.astype(x.dtype)[None, None, :]
+
+
+def conv_decode_step(conv_state: jnp.ndarray, x_new: jnp.ndarray,
+                     w: jnp.ndarray, b: jnp.ndarray):
+    """conv_state: (B, KW-1, C); x_new: (B, C). Returns (y (B,C), new_state)."""
+    kw = w.shape[1]
+    full = jnp.concatenate([conv_state.astype(x_new.dtype),
+                            x_new[:, None, :]], axis=1)  # (B, KW, C)
+    y = jnp.einsum("bkc,ck->bc", full, w.astype(x_new.dtype)) \
+        + b.astype(x_new.dtype)[None, :]
+    return y, full[:, 1:, :]
+
+
+def _split_zxbcdt(zxbcdt, d_inner, conv_dim, n_heads):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    assert dt.shape[-1] == n_heads
+    return z, xBC, dt
+
+
+def mamba2_mixer(p: Dict[str, jnp.ndarray], cfg, u: jnp.ndarray,
+                 initial_state: Optional[jnp.ndarray] = None,
+                 ssd_impl=ssd_chunked):
+    """Full Mamba2 block mix for train/prefill.  u: (B, S, d_model).
+
+    Returns (out, final_ssm_state, conv_tail) where conv_tail is the last
+    KW-1 pre-conv inputs — the conv state needed to continue decoding.
+    """
+    B_, S, _ = u.shape
+    din, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = din + 2 * G * N
+    dtype = u.dtype
+
+    zxbcdt = jnp.einsum("bsd,dz->bsz", u, p["in_proj"].astype(dtype))
+    z, xBC, dt_raw = _split_zxbcdt(zxbcdt, din, conv_dim, H)
+    kw = p["conv_w"].shape[1]
+    conv_tail = xBC[:, -(kw - 1):, :] if S >= kw - 1 else jnp.pad(
+        xBC, ((0, 0), (kw - 1 - S, 0), (0, 0)))
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :din].reshape(B_, S, H, P)
+    Bm = xBC[..., din:din + G * N].reshape(B_, S, G, N)
+    Cm = xBC[..., din + G * N:].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+
+    X = (x.astype(jnp.float32) * dt[..., None]).astype(dtype)
+    Adt = (dt * A[None, None, :]).astype(dtype)
+    Y, final = ssd_impl(X, Adt, Bm, Cm, cfg.ssm_chunk,
+                        initial_state=initial_state)
+    Y = Y + p["D"].astype(dtype)[None, None, :, None] * x
+    y = Y.reshape(B_, S, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dtype))
+    return out, final, conv_tail
+
+
+def mamba2_decode(p: Dict[str, jnp.ndarray], cfg, u: jnp.ndarray,
+                  conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """One-token decode.  u: (B, 1, d_model).
+
+    Returns (out (B,1,d), new_conv_state, new_ssm_state).
+    """
+    B_ = u.shape[0]
+    din, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_headdim
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    dtype = u.dtype
+
+    zxbcdt = jnp.einsum("bd,dz->bz", u[:, 0], p["in_proj"].astype(dtype))
+    z, xBC, dt_raw = _split_zxbcdt(zxbcdt, din, din + 2 * G * N, H)
+    xBC, new_conv = conv_decode_step(conv_state, xBC, p["conv_w"], p["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :din].reshape(B_, H, P)
+    Bm = xBC[..., din:din + G * N].reshape(B_, G, N)
+    Cm = xBC[..., din + G * N:].reshape(B_, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(
+        ssm_state.astype(jnp.float32), x.astype(jnp.float32), dt, A,
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32))
+    y = y.astype(dtype) + p["D"].astype(dtype)[None, :, None] * x
+    y = y.reshape(B_, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(dtype))
+    return out[:, None, :], new_conv, new_state.astype(ssm_state.dtype)

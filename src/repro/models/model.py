@@ -1,0 +1,425 @@
+"""Model assembly: embed → lax.scan(blocks) → norm → head, for all families.
+
+Layers are stacked and scanned (MaxText-style) so the lowered HLO is O(1) in
+depth — essential for compiling 88-layer dry-runs on a CPU host.  Hybrid
+models scan *super-layers* (``shared_attn_every`` Mamba2 blocks + one
+weight-shared attention block); the shared block's parameters live outside
+the scan and are closed over.
+
+Three entry points per model:
+  * :func:`forward_train`   — full-sequence logits + CE loss path.
+  * :func:`prefill`         — full-sequence forward that also returns the
+                              serving cache (KV / SSM+conv states).
+  * :func:`decode_step`     — one-token step against the cache.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.attention import update_positions
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_lookup, rmsnorm
+from repro.launch.partitioning import logical_constraint
+from repro.models.params import (
+    ParamDef,
+    build_shapes,
+    build_specs,
+    init_tree,
+    stack_defs,
+)
+
+__all__ = ["param_defs", "param_shapes", "param_specs", "init_params",
+           "forward_train", "prefill", "decode_step", "init_cache",
+           "cache_shapes"]
+
+
+# ---------------------------------------------------------------------------
+# parameter tree
+# ---------------------------------------------------------------------------
+
+
+def _block_defs(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm", "audio"):
+        return B.dense_block_defs(cfg)
+    if cfg.family == "moe":
+        return B.moe_block_defs(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        return B.mamba2_block_defs(cfg)
+    raise ValueError(cfg.family)
+
+
+def _n_scan(cfg: ModelConfig) -> int:
+    """Number of scan steps (super-layers for hybrid)."""
+    if cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.shared_attn_every == 0, \
+            (cfg.n_layers, cfg.shared_attn_every)
+        return cfg.n_layers // cfg.shared_attn_every
+    return cfg.n_layers
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    D, V = cfg.d_model, cfg.vocab
+    blk = _block_defs(cfg)
+    if cfg.family == "hybrid":
+        blk = stack_defs(blk, cfg.shared_attn_every)   # inner unrolled axis
+    tree = {
+        "embed": ParamDef((V, D), ("vocab", "embed_fsdp")),
+        "blocks": stack_defs(blk, _n_scan(cfg)),
+        "final_ln": ParamDef((D,), (None,), init="ones"),
+        "head": ParamDef((D, V), ("embed_fsdp", "vocab")),
+    }
+    if cfg.family == "hybrid":
+        tree["shared"] = B.dense_block_defs(cfg)
+    return tree
+
+
+def param_shapes(cfg: ModelConfig) -> Dict:
+    return build_shapes(param_defs(cfg))
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    return build_specs(param_defs(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    return init_tree(param_defs(cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# serving-cache trees
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, capacity: int) -> Dict:
+    """ShapeDtypeStructs of the serving cache (for dry-run input_specs)."""
+    dt = jnp.dtype(cfg.dtype)
+    L = _n_scan(cfg)
+    out: Dict = {}
+    if cfg.family in ("dense", "moe", "vlm"):
+        K, hd = cfg.n_kv_heads, cfg.hd
+        out["k"] = jax.ShapeDtypeStruct((L, batch, capacity, K, hd), dt)
+        out["v"] = jax.ShapeDtypeStruct((L, batch, capacity, K, hd), dt)
+        out["kv_positions"] = jax.ShapeDtypeStruct((batch, capacity), jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * N
+        nl = (L, cfg.shared_attn_every) if cfg.family == "hybrid" else (L,)
+        out["ssm"] = jax.ShapeDtypeStruct(
+            nl + (batch, H, P, N), jnp.float32)
+        out["conv"] = jax.ShapeDtypeStruct(
+            nl + (batch, B.CONV_KW - 1, conv_dim), dt)
+    if cfg.family == "hybrid":
+        K, hd = cfg.n_kv_heads, cfg.hd
+        cap = capacity if cfg.sliding_window is None else min(
+            capacity, cfg.sliding_window)
+        out["k"] = jax.ShapeDtypeStruct((L, batch, cap, K, hd), dt)
+        out["v"] = jax.ShapeDtypeStruct((L, batch, cap, K, hd), dt)
+        out["kv_positions"] = jax.ShapeDtypeStruct((batch, cap), jnp.int32)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Dict:
+    shapes = cache_shapes(cfg, batch, capacity)
+    out = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+    if "kv_positions" in out:
+        out["kv_positions"] = jnp.full(
+            shapes["kv_positions"].shape, -1, jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def _scan_or_unroll(body, cfg: ModelConfig, carry, xs):
+    """lax.scan over layers, or a static unroll with identical semantics.
+
+    The unrolled form is used by the dry-run: XLA's cost analysis counts a
+    ``while`` body once regardless of trip count, so scanned models report
+    ~1/L of their true FLOPs; unrolling makes cost_analysis exact while
+    keeping shapes, shardings and math identical.
+    """
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        xs_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    ys_stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, ys_stacked
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    dtype = jnp.dtype(cfg.dtype)
+    if "embeds" in batch:  # stubbed modality frontend (vlm / audio)
+        h = batch["embeds"].astype(dtype)
+    else:
+        h = embed_lookup(params["embed"], batch["tokens"], dtype)
+    return logical_constraint(h, "batch", None, None)
+
+
+def _default_positions(cfg: ModelConfig, Bsz: int, S: int):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (Bsz, S, 3))
+    return pos
+
+
+def _forward_seq(params, cfg: ModelConfig, h, positions, collect_cache: bool):
+    """Shared train/prefill body.  Returns (h, cache_ys, aux)."""
+    aux = {}
+
+    def _sp(x):
+        """Sequence-parallel carry sharding (Megatron-SP analogue): the
+        tensor SAVED between blocks (and for the backward pass) lives
+        seq-sharded over the model axis; GSPMD inserts the all-gather
+        before the column-parallel matmuls and the reduce-scatter after
+        the row-parallel ones."""
+        if cfg.seq_parallel:
+            return logical_constraint(x, "batch", "seq_sp", None)
+        return x
+
+    h = _sp(h)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        def body(carry, xs):
+            hh, kv = B.apply_dense_block(
+                xs, cfg, carry, positions,
+                window=cfg.sliding_window, return_kv=collect_cache)
+            return _sp(hh), kv
+        h, kvs = _scan_or_unroll(_maybe_remat(body, cfg), cfg, h,
+                                 params["blocks"])
+        cache_ys = {"kv": kvs} if collect_cache else None
+
+    elif cfg.family == "moe":
+        def body(carry, xs):
+            hh, kv, aux_l = B.apply_moe_block(
+                xs, cfg, carry, positions,
+                window=cfg.sliding_window, return_kv=collect_cache)
+            return _sp(hh), (kv, aux_l)
+        h, (kvs, aux_layers) = _scan_or_unroll(
+            _maybe_remat(body, cfg), cfg, h, params["blocks"])
+        aux = {k: jnp.mean(v) for k, v in aux_layers.items()}
+        cache_ys = {"kv": kvs} if collect_cache else None
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh, ssm, conv = B.apply_mamba2_block(xs, cfg, carry)
+            return _sp(hh), (ssm, conv)
+        h, (ssms, convs) = _scan_or_unroll(
+            _maybe_remat(body, cfg), cfg, h, params["blocks"])
+        cache_ys = {"ssm": ssms, "conv": convs} if collect_cache else None
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+
+        def body(carry, xs):
+            hh = carry
+            ssm_l, conv_l = [], []
+            for j in range(every):  # static unroll inside the scan step
+                p_j = jax.tree.map(lambda a: a[j], xs)
+                hh, ssm, conv = B.apply_mamba2_block(p_j, cfg, hh)
+                ssm_l.append(ssm)
+                conv_l.append(conv)
+            hh, kv = B.apply_dense_block(
+                shared, cfg, hh, positions,
+                window=cfg.sliding_window, return_kv=collect_cache)
+            return hh, (jnp.stack(ssm_l), jnp.stack(conv_l), kv)
+        h, (ssms, convs, kvs) = _scan_or_unroll(
+            _maybe_remat(body, cfg), cfg, h, params["blocks"])
+        cache_ys = ({"ssm": ssms, "conv": convs, "kv": kvs}
+                    if collect_cache else None)
+    else:
+        raise ValueError(cfg.family)
+
+    return h, cache_ys, aux
+
+
+def _head_logits(params, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def _fused_head_ce(params, cfg: ModelConfig, h: jnp.ndarray,
+                   labels: jnp.ndarray) -> jnp.ndarray:
+    """Tensor-parallel-aware fused LM head + cross entropy.
+
+    The naive ``take_along_axis(logits, labels)`` forces GSPMD to all-gather
+    the vocab-sharded (B, S, V) logits onto every device.  Instead:
+
+    * logits stay bf16 and vocab-sharded; logsumexp reduces over the sharded
+      axis, lowering to partial reductions + a tiny (B, S) all-reduce;
+    * the gold logit is recomputed as ``h · head[:, label]`` — a gather of
+      head *columns* (D-sized) instead of a gather from the logits cube.
+    """
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    head = params["head"].astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, head,
+                        preferred_element_type=jnp.float32).astype(h.dtype)
+    logits = logical_constraint(logits, "batch", None, "vocab")
+    m = jnp.max(logits, axis=-1)
+    ex = jnp.exp((logits - m[..., None]).astype(jnp.float32))
+    lse = m.astype(jnp.float32) + jnp.log(jnp.sum(ex, axis=-1))
+
+    Bsz, S = labels.shape
+    gold_cols = jnp.take(head, labels.reshape(-1), axis=1)  # (D, B*S)
+    # (D, B*S) -> (B, S, D) then a cheap row-wise dot with h.
+    gold_cols = gold_cols.T.reshape(Bsz, S, head.shape[0])
+    gold = jnp.sum(h.astype(jnp.float32) * gold_cols.astype(jnp.float32),
+                   axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def forward_train(params, cfg: ModelConfig, batch: Dict):
+    """Returns (loss, metrics).  batch: tokens|embeds, labels[, positions]."""
+    h = _embed_inputs(params, cfg, batch)
+    Bsz, S = h.shape[0], h.shape[1]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, Bsz, S)
+    h, _, aux = _forward_seq(params, cfg, h, positions, collect_cache=False)
+
+    labels = batch["labels"]
+    if cfg.logits_chunk and S > cfg.logits_chunk:
+        # Beyond-paper option: chunked fused head+CE so even the sharded
+        # (B, S, V) logits buffer never fully materializes.
+        n = S // cfg.logits_chunk
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n):  # static unroll: exact HLO cost accounting
+            sl = slice(i * cfg.logits_chunk, (i + 1) * cfg.logits_chunk)
+            total = total + _fused_head_ce(params, cfg, h[:, sl], labels[:, sl])
+        loss = total / n
+    else:
+        loss = _fused_head_ce(params, cfg, h, labels)
+
+    metrics = dict(ce_loss=loss, **aux)
+    if "moe_aux_loss" in aux:
+        loss = loss + 0.01 * aux["moe_aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict, capacity: Optional[int] = None):
+    """Full-sequence forward; returns (last-token logits, serving cache)."""
+    if cfg.is_encoder_only:
+        raise ValueError("encoder-only models have no decode/prefill cache")
+    h = _embed_inputs(params, cfg, batch)
+    Bsz, S = h.shape[0], h.shape[1]
+    capacity = capacity or S
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, Bsz, S)
+    h, cache_ys, _ = _forward_seq(params, cfg, h, positions, collect_cache=True)
+    logits = _head_logits(params, cfg, h[:, -1:, :])
+
+    cache: Dict = {}
+    if cache_ys and "kv" in cache_ys and cache_ys["kv"] is not None:
+        k, v = cache_ys["kv"]  # (L, B, S', K, hd) where S' = S (full) for attn
+        cap = capacity
+        if cfg.family == "hybrid" and cfg.sliding_window is not None:
+            cap = min(capacity, cfg.sliding_window)
+            k, v = k[:, :, -cap:], v[:, :, -cap:]
+        pad = cap - k.shape[2]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["k"], cache["v"] = k, v
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(k.shape[2], dtype=jnp.int32)[None], (Bsz, k.shape[2]))
+        if cfg.family == "hybrid" and cfg.sliding_window is not None:
+            kv_pos = kv_pos + max(S - cap, 0)
+        cache["kv_positions"] = jnp.where(kv_pos < S, kv_pos, -1)
+    if cache_ys and "ssm" in cache_ys:
+        cache["ssm"] = cache_ys["ssm"].astype(jnp.float32)
+        cache["conv"] = cache_ys["conv"]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict, cache: Dict,
+                pos: jnp.ndarray):
+    """One-token decode.  batch: token (B,) or embed (B,1,D); pos: (B,).
+
+    Returns (logits (B,1,V), new cache).
+    """
+    if cfg.is_encoder_only:
+        raise ValueError("encoder-only models have no decode step")
+    dtype = jnp.dtype(cfg.dtype)
+    if "embeds" in batch:
+        h = batch["embeds"].astype(dtype)
+    else:
+        h = embed_lookup(params["embed"], batch["tokens"][:, None], dtype)
+
+    new_cache = dict(cache)
+    if "kv_positions" in cache:
+        kv_positions = update_positions(cache["kv_positions"], pos)
+        new_cache["kv_positions"] = kv_positions
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        apply = (B.apply_moe_block_decode if cfg.family == "moe"
+                 else B.apply_dense_block_decode)
+
+        def body(carry, xs):
+            p_l, ck, cv = xs
+            hh, ck, cv = apply(p_l, cfg, carry, pos, ck, cv, kv_positions,
+                               window=cfg.sliding_window)
+            return hh, (ck, cv)
+        h, (ks, vs) = _scan_or_unroll(
+            body, cfg, h, (params["blocks"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            p_l, conv, ssm = xs
+            hh, conv, ssm = B.apply_mamba2_block_decode(
+                p_l, cfg, carry, conv, ssm)
+            return hh, (conv, ssm)
+        h, (convs, ssms) = _scan_or_unroll(
+            body, cfg, h, (params["blocks"], cache["conv"], cache["ssm"]))
+        new_cache["conv"], new_cache["ssm"] = convs, ssms
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        every = cfg.shared_attn_every
+
+        def body(carry, xs):
+            p_s, conv_s, ssm_s, ck, cv = xs
+            hh = carry
+            convs, ssms = [], []
+            for j in range(every):
+                p_j = jax.tree.map(lambda a: a[j], p_s)
+                hh, conv, ssm = B.apply_mamba2_block_decode(
+                    p_j, cfg, hh, conv_s[j], ssm_s[j])
+                convs.append(conv)
+                ssms.append(ssm)
+            hh, ck, cv = B.apply_dense_block_decode(
+                shared, cfg, hh, pos, ck, cv, kv_positions,
+                window=cfg.sliding_window)
+            return hh, (jnp.stack(convs), jnp.stack(ssms), ck, cv)
+        h, (convs, ssms, ks, vs) = _scan_or_unroll(
+            body, cfg, h,
+            (params["blocks"], cache["conv"], cache["ssm"],
+             cache["k"], cache["v"]))
+        new_cache.update(conv=convs, ssm=ssms, k=ks, v=vs)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _head_logits(params, cfg, h)
+    return logits, new_cache

@@ -1,0 +1,94 @@
+"""Parameter definition / init / shape machinery.
+
+Each parameter is declared once as a :class:`ParamDef` (shape, dtype,
+logical sharding axes, initializer).  From the same declaration we derive:
+
+* ``jax.ShapeDtypeStruct`` trees for the multi-pod dry-run (no allocation),
+* real initialized arrays for smoke tests / the e2e training example,
+* ``NamedSharding`` trees via the logical-axis rules in ``repro.launch.mesh``.
+
+Logical axes used by the zoo:
+  "layer"      — scanned layer axis (never sharded)
+  "vocab"      — vocabulary dim            -> "model"
+  "embed_fsdp" — weight d_model dims       -> "data"  (FSDP/ZeRO-3 style)
+  "heads"      — attention head*head_dim   -> "model" (tensor parallel)
+  "ff"         — MLP hidden dim            -> "model"
+  "expert"     — MoE expert dim            -> "model" (expert parallel)
+  "ssm_inner"  — Mamba2 inner/conv dims    -> "model"
+  None         — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "build_shapes", "build_specs", "init_tree", "stack_defs"]
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Axes
+    dtype: str = "float32"
+    init: str = "normal"      # normal | zeros | ones | custom
+    init_scale: float = 0.02
+    custom_init: Optional[Callable] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def build_shapes(defs) -> Dict:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def build_specs(defs) -> Dict:
+    """Logical-axis PartitionSpec-precursors (tuples of axis names)."""
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _init_one(d: ParamDef, key) -> jnp.ndarray:
+    if d.custom_init is not None:
+        return d.custom_init(key).astype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    return (jax.random.normal(key, d.shape, jnp.float32)
+            * d.init_scale).astype(d.dtype)
+
+
+def init_tree(defs, key) -> Dict:
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_one(d, k) for d, k in zip(leaves, keys)])
+
+
+def stack_defs(defs, n_layers: int) -> Dict:
+    """Prepend a scanned 'layer' axis to every ParamDef in the tree."""
+    def stack(d: ParamDef) -> ParamDef:
+        custom = None
+        if d.custom_init is not None:
+            base = d.custom_init
+
+            def custom(key, _base=base, _n=n_layers, _d=d):
+                ks = jax.random.split(key, _n)
+                return jnp.stack([_base(k) for k in ks])
+        return ParamDef(
+            shape=(n_layers,) + d.shape,
+            axes=("layer",) + d.axes,
+            dtype=d.dtype, init=d.init, init_scale=d.init_scale,
+            custom_init=custom)
+    return jax.tree.map(stack, defs, is_leaf=lambda x: isinstance(x, ParamDef))

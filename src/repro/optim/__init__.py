@@ -1,0 +1,5 @@
+"""Optimizer substrate: AdamW + schedules, written as pure pytree functions."""
+
+from repro.optim.adamw import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule"]

@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay + global-norm clipping (pure pytrees)."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule"]
+
+
+def adamw_init(params) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(
+    grads, opt_state: Dict, params, *, lr,
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, clip_norm: float = 1.0,
+) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params, new_opt_state, stats)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    count = opt_state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        # decay only matrices (norm scales / biases are 1-D)
+        wd = weight_decay if p.ndim > 1 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    stats = dict(grad_norm=gnorm, clip_scale=scale)
+    return new_p, {"m": new_m, "v": new_v, "count": count}, stats
+
+
+def cosine_schedule(*, peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = step / max(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+    return lr

@@ -1,0 +1,12 @@
+"""Training / serving step construction."""
+
+from repro.runtime.steps import (
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    make_encode_step,
+    step_fn_for,
+)
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_encode_step", "step_fn_for"]

@@ -1,0 +1,82 @@
+"""jit-able train / serve step functions for every architecture.
+
+``step_fn_for(cfg, kind)`` returns a pure function suitable for
+``jax.jit(...).lower(**input_specs(...))`` — the single entry point used by
+the trainer, the server, and the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward_train, prefill
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.model import _embed_inputs, _forward_seq, _head_logits
+from repro.optim import adamw_update, cosine_schedule
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_encode_step", "step_fn_for"]
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    weight_decay: float = 0.1, clip_norm: float = 1.0):
+    lr_fn = cosine_schedule(peak_lr=peak_lr, warmup_steps=warmup_steps,
+                            total_steps=total_steps)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return forward_train(p, cfg, batch)
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = lr_fn(step)
+        new_params, new_opt, stats = adamw_update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=weight_decay, clip_norm=clip_norm)
+        metrics = dict(metrics, lr=lr, **stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: Optional[int] = None):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, capacity=capacity)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, batch, cache, pos):
+        return decode_step(params, cfg, batch, cache, pos)
+    return serve_step
+
+
+def make_encode_step(cfg: ModelConfig):
+    """Encoder-only 'prefill': full forward to logits (e.g. HuBERT)."""
+    def encode_step(params, batch):
+        h = _embed_inputs(params, cfg, batch)
+        positions = batch.get("positions")
+        if positions is None:
+            Bsz, S = h.shape[0], h.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+        h, _, _ = _forward_seq(params, cfg, h, positions, collect_cache=False)
+        return _head_logits(params, cfg, h)
+    return encode_step
+
+
+def step_fn_for(cfg: ModelConfig, kind: str) -> Callable:
+    if kind == "train":
+        return make_train_step(cfg)
+    if kind == "prefill":
+        return make_prefill_step(cfg)
+    if kind == "encode":
+        return make_encode_step(cfg)
+    if kind == "decode":
+        return make_decode_step(cfg)
+    raise ValueError(kind)

@@ -1,0 +1,20 @@
+"""Scheduler layer: trace-driven evaluation, cluster sim, monitoring, elastic."""
+
+from repro.sched.cluster import ClusterResult, ClusterSim, Job, Node
+from repro.sched.elastic import ElasticPlanner, plan_mesh
+from repro.sched.monitor import HBMFootprintModel, MemoryMonitor, read_rss_gb
+from repro.sched.simulator import (
+    ExperimentResult,
+    MethodResult,
+    default_methods,
+    evaluate_workflow,
+    run_paper_experiment,
+)
+
+__all__ = [
+    "ClusterResult", "ClusterSim", "Job", "Node",
+    "ElasticPlanner", "plan_mesh",
+    "HBMFootprintModel", "MemoryMonitor", "read_rss_gb",
+    "ExperimentResult", "MethodResult", "default_methods",
+    "evaluate_workflow", "run_paper_experiment",
+]

@@ -1,0 +1,86 @@
+"""Elastic scaling: node membership changes + mesh re-planning.
+
+At 1000+-node scale, membership churn is routine.  This module keeps the
+data plane restartable under churn:
+
+* :func:`plan_mesh` — best (data, model) factorization for a surviving
+  device count, honoring divisibility of the model's sharded dims.
+* :class:`ElasticPlanner` — admission control for concurrent jobs using
+  their KS+ memory envelopes (host- or HBM-side): on `node_join` /
+  `node_leave` it recomputes which queued jobs fit *now* and which running
+  jobs must be checkpointed and re-sharded.
+
+Together with the deterministic data pipeline (batches are a pure function
+of ``(seed, step, shard)``) and atomic checkpoints, a re-shard is: drain →
+checkpoint → re-plan mesh → restore → continue at the same step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import AllocationPlan, alloc_at
+
+__all__ = ["plan_mesh", "ElasticPlanner"]
+
+
+def plan_mesh(n_devices: int, model_divisors: Tuple[int, ...],
+              prefer_model: int = 16) -> Tuple[int, int]:
+    """Pick (data, model) for ``n_devices`` so every dim in
+    ``model_divisors`` stays divisible by the model axis."""
+    best = (n_devices, 1)
+    for model in range(min(prefer_model, n_devices), 0, -1):
+        if n_devices % model:
+            continue
+        if all(d % model == 0 for d in model_divisors if d):
+            best = (n_devices // model, model)
+            break
+    return best
+
+
+@dataclasses.dataclass
+class _Slice:
+    name: str
+    memory_gb: float
+    jobs: List[Tuple[str, AllocationPlan, float]] = dataclasses.field(
+        default_factory=list)  # (job id, envelope, started_at)
+
+    def headroom(self, now: float, horizon_s: float = 600.0) -> float:
+        grid = now + np.linspace(0, horizon_s, 32)
+        used = np.zeros_like(grid)
+        for _, plan, t0 in self.jobs:
+            used += alloc_at(plan, np.maximum(grid - t0, 0.0))
+        return float(self.memory_gb - used.max())
+
+
+class ElasticPlanner:
+    def __init__(self):
+        self.slices: Dict[str, _Slice] = {}
+
+    def node_join(self, name: str, memory_gb: float):
+        self.slices[name] = _Slice(name, memory_gb)
+
+    def node_leave(self, name: str) -> List[str]:
+        """Returns job ids that must be checkpointed and requeued."""
+        sl = self.slices.pop(name, None)
+        return [jid for jid, _, _ in (sl.jobs if sl else [])]
+
+    def admit(self, jid: str, envelope: AllocationPlan, now: float
+              ) -> Optional[str]:
+        """Place a job on the slice with the most post-placement headroom."""
+        best, best_head = None, -np.inf
+        for sl in self.slices.values():
+            head = sl.headroom(now) - float(envelope.peaks.max())
+            if head > best_head:
+                best, best_head = sl, head
+        if best is None or best_head < 0:
+            return None
+        best.jobs.append((jid, envelope, now))
+        return best.name
+
+    def finish(self, jid: str):
+        for sl in self.slices.values():
+            sl.jobs = [(j, p, t) for j, p, t in sl.jobs if j != jid]

@@ -1,0 +1,130 @@
+"""Trace-driven evaluation harness (paper §III).
+
+Fits every method per task family on the training split, replays the test
+split through the OOM/retry simulator, and aggregates GB·s wastage —
+reproducing the comparisons behind Figs. 6–8.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    DefaultMethod,
+    KSegments,
+    KSPlus,
+    KSPlusAuto,
+    PPMImproved,
+    TovarPPM,
+    simulate_execution,
+)
+from repro.traces.generator import Execution, Workflow
+
+__all__ = ["MethodResult", "ExperimentResult", "default_methods", "evaluate_workflow"]
+
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    per_family_gbs: Dict[str, float]
+    total_gbs: float
+    retries: int
+    failures: int  # executions that never succeeded (hit machine limits)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    workflow: str
+    seed: int
+    train_frac: float
+    methods: Dict[str, MethodResult]
+
+    def reduction_vs(self, method: str, baseline: str) -> float:
+        """Fractional wastage reduction of ``method`` vs ``baseline``."""
+        b = self.methods[baseline].total_gbs
+        m = self.methods[method].total_gbs
+        return (b - m) / b if b > 0 else 0.0
+
+
+def default_methods(k: int, machine_memory: float,
+                    default_limit: float) -> Dict[str, Callable[[], object]]:
+    """The paper's method zoo (§III-B), freshly constructed per family."""
+    return {
+        "ks+": lambda: KSPlus(k=k),
+        "ks+auto": lambda: KSPlusAuto(machine_memory=machine_memory),
+        "k-segments-selective": lambda: KSegments(k=k, variant="selective"),
+        "k-segments-partial": lambda: KSegments(k=k, variant="partial"),
+        "tovar-ppm": lambda: TovarPPM(machine_memory=machine_memory),
+        "ppm-improved": lambda: PPMImproved(machine_memory=machine_memory),
+        "default": lambda: DefaultMethod(limit_gb=default_limit,
+                                         machine_memory=machine_memory),
+    }
+
+
+def evaluate_workflow(
+    wf: Workflow,
+    *,
+    seed: int,
+    train_frac: float,
+    k: int = 4,
+    machine_memory: float = 128.0,
+    methods: Optional[List[str]] = None,
+    dt: float = 1.0,
+) -> ExperimentResult:
+    train, test = wf.split(seed, train_frac, dt)
+    names = methods or list(default_methods(k, machine_memory, 8.0).keys())
+    results: Dict[str, MethodResult] = {
+        m: MethodResult(m, {}, 0.0, 0, 0) for m in names
+    }
+
+    for fname, train_execs in train.items():
+        fam = wf.families[fname]
+        zoo = default_methods(k, machine_memory, fam.default_limit_gb)
+        mems = [e.mem for e in train_execs]
+        dts = [e.dt for e in train_execs]
+        inputs = [e.input_gb for e in train_execs]
+        for mname in names:
+            method = zoo[mname]()
+            method.fit(mems, dts, inputs)
+            fam_gbs = 0.0
+            for e in test[fname]:
+                plan = method.predict(e.input_gb)
+                res = simulate_execution(
+                    plan, method.retry, e.mem, e.dt,
+                    machine_memory=machine_memory,
+                )
+                fam_gbs += res.wastage_gbs
+                results[mname].retries += res.num_retries
+                results[mname].failures += 0 if res.succeeded else 1
+            results[mname].per_family_gbs[fname] = fam_gbs
+            results[mname].total_gbs += fam_gbs
+
+    return ExperimentResult(wf.name, seed, train_frac, results)
+
+
+def run_paper_experiment(
+    wf: Workflow,
+    *,
+    seeds=range(10),
+    train_fracs=(0.25, 0.50, 0.75),
+    k: int = 4,
+    machine_memory: float = 128.0,
+    methods: Optional[List[str]] = None,
+    dt: float = 1.0,
+):
+    """Fig. 6 protocol: 10 seeds × {25, 50, 75}% training data, averaged."""
+    out: Dict[float, Dict[str, float]] = {}
+    for frac in train_fracs:
+        acc: Dict[str, List[float]] = {}
+        for seed in seeds:
+            res = evaluate_workflow(
+                wf, seed=seed, train_frac=frac, k=k,
+                machine_memory=machine_memory, methods=methods, dt=dt,
+            )
+            for name, mr in res.methods.items():
+                acc.setdefault(name, []).append(mr.total_gbs)
+        out[frac] = {name: float(np.mean(v)) for name, v in acc.items()}
+    return out

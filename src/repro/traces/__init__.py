@@ -1,0 +1,12 @@
+"""Workflow trace substrate: synthetic nf-core-like generators + ML job traces."""
+
+from repro.traces.generator import (
+    Execution,
+    Phase,
+    TaskFamily,
+    Workflow,
+    eager,
+    sarek,
+)
+
+__all__ = ["Execution", "Phase", "TaskFamily", "Workflow", "eager", "sarek"]

@@ -1,0 +1,175 @@
+"""Predictor, retry strategies, wastage metric, baselines."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AllocationPlan,
+    DefaultMethod,
+    KSegments,
+    KSPlus,
+    PPMImproved,
+    TovarPPM,
+    alloc_at,
+    first_violation,
+    ksplus_retry,
+    simulate_execution,
+)
+
+
+def _linear_traces(n=30, seed=0, noise=0.02):
+    rng = np.random.default_rng(seed)
+    Is, mems = [], []
+    for _ in range(n):
+        I = float(rng.uniform(1, 10))
+        L = int(40 + 12 * I + rng.normal(0, 2))
+        split = int(0.7 * L)
+        m = np.concatenate([np.full(split, 1.5 + 0.4 * I),
+                            np.full(L - split, 3.0 + 0.9 * I)])
+        mems.append(m + rng.normal(0, noise, L))
+        Is.append(I)
+    return mems, [1.0] * n, Is
+
+
+class TestKSPlusPredictor:
+    def test_plan_monotone_and_offset(self):
+        mems, dts, Is = _linear_traces()
+        m = KSPlus(k=3)
+        m.fit(mems, dts, Is)
+        for I in (2.0, 5.0, 9.0):
+            plan = m.predict(I)
+            assert plan.starts[0] == 0.0
+            assert np.all(np.diff(plan.starts) >= 0)
+            assert plan.is_monotone()
+            # +10% peak offset ⇒ predicted peak above the true final level
+            assert plan.peaks[-1] > (3.0 + 0.9 * I) * 1.02
+
+    def test_prediction_scales_with_input(self):
+        mems, dts, Is = _linear_traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        p_small, p_big = m.predict(2.0), m.predict(9.0)
+        assert p_big.peaks[-1] > p_small.peaks[-1]
+        assert p_big.starts[-1] > p_small.starts[-1]
+
+    def test_runtime_prediction(self):
+        mems, dts, Is = _linear_traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        rt = m.predict_runtime(5.0)
+        assert 40 + 60 * 0.7 < rt < 160
+
+
+class TestRetry:
+    def _plan(self):
+        return AllocationPlan(starts=np.asarray([0.0, 100.0, 200.0]),
+                              peaks=np.asarray([2.0, 4.0, 8.0]))
+
+    def test_retime_before_last_segment(self):
+        plan = self._plan()
+        new = ksplus_retry(plan, t_fail=50.0, used=3.0)
+        # next segment (idx 1) now starts exactly at the failure time
+        assert np.isclose(new.starts[1], 50.0)
+        assert np.isclose(new.starts[2], 100.0)  # scaled by same factor
+        np.testing.assert_allclose(new.peaks, plan.peaks)  # peaks untouched
+
+    def test_last_segment_bumps_peak(self):
+        plan = self._plan()
+        new = ksplus_retry(plan, t_fail=250.0, used=9.0)
+        assert np.isclose(new.peaks[-1], 8.0 * 1.2)
+        np.testing.assert_allclose(new.starts, plan.starts)
+
+    def test_fail_at_zero(self):
+        plan = self._plan()
+        new = ksplus_retry(plan, t_fail=0.0, used=3.0)
+        assert np.isclose(new.starts[1], 0.0)
+        assert alloc_at(new, 0.0) >= 4.0  # allocation stepped up immediately
+
+    @given(t=st.floats(0, 300), used=st.floats(0.1, 20))
+    @settings(max_examples=50, deadline=None)
+    def test_retry_keeps_plan_valid(self, t, used):
+        new = ksplus_retry(self._plan(), t, used)
+        assert new.starts[0] == 0.0
+        assert np.all(np.diff(new.starts) >= 0)
+        assert new.is_monotone()
+
+
+class TestWastage:
+    def test_exact_value_flat(self):
+        plan = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([4.0]))
+        mem = np.full(100, 3.0)
+        res = simulate_execution(plan, lambda p, t, u: p, mem, 1.0)
+        assert res.succeeded and res.num_retries == 0
+        assert np.isclose(res.wastage_gbs, 100.0)
+
+    def test_failed_attempt_counts_fully(self):
+        plan = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([2.0]))
+        mem = np.concatenate([np.full(50, 1.0), np.full(50, 3.0)])
+
+        def retry(p, t, u):
+            return p.with_(peaks=np.asarray([3.5]))
+        res = simulate_execution(plan, retry, mem, 1.0)
+        assert res.succeeded and res.num_retries == 1
+        # failed attempt: 51 samples * 2.0 allocated; success: 50*2.5 + 50*0.5
+        assert np.isclose(res.wastage_gbs, 51 * 2.0 + 50 * 2.5 + 50 * 0.5)
+
+    def test_unsatisfiable_demand(self):
+        plan = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([2.0]))
+        mem = np.full(10, 500.0)
+        res = simulate_execution(plan, lambda p, t, u: p, mem, 1.0,
+                                 machine_memory=128.0)
+        assert not res.succeeded
+
+    def test_first_violation(self):
+        plan = AllocationPlan(starts=np.asarray([0.0, 10.0]),
+                              peaks=np.asarray([2.0, 5.0]))
+        mem = np.asarray([1.0] * 5 + [4.0] * 10)
+        assert first_violation(plan, mem, 1.0) == 5  # 4.0 > 2.0 in seg 0
+        assert first_violation(plan, np.asarray([1.0] * 15), 1.0) == -1
+
+
+class TestBaselines:
+    def test_all_methods_protocol(self):
+        mems, dts, Is = _linear_traces()
+        test_mem = mems[0]
+        methods = [KSPlus(k=3), KSegments(k=3), KSegments(k=3, variant="partial"),
+                   TovarPPM(), PPMImproved(), DefaultMethod(limit_gb=16.0)]
+        for m in methods:
+            m.fit(mems, dts, Is)
+            plan = m.predict(Is[0])
+            res = simulate_execution(plan, m.retry, test_mem, 1.0,
+                                     machine_memory=128.0)
+            assert res.succeeded, m.name
+            assert res.wastage_gbs >= 0
+
+    def test_tovar_allocates_machine_on_failure(self):
+        m = TovarPPM(machine_memory=64.0)
+        m.fit(*_linear_traces(10))
+        plan = m.predict(1.0)
+        new = m.retry(plan, 5.0, 3.0)
+        assert np.all(new.peaks == 64.0)
+
+    def test_ppm_improved_doubles(self):
+        m = PPMImproved(machine_memory=512.0)
+        m.fit(*_linear_traces(10))
+        plan = m.predict(1.0)
+        new = m.retry(plan, 5.0, 3.0)
+        np.testing.assert_allclose(new.peaks, plan.peaks * 2)
+
+    def test_ksegments_equal_segments(self):
+        mems, dts, Is = _linear_traces()
+        m = KSegments(k=4)
+        m.fit(mems, dts, Is)
+        plan = m.predict(5.0)
+        assert plan.n == 4
+        gaps = np.diff(plan.starts)
+        np.testing.assert_allclose(gaps, gaps[0], rtol=1e-6)  # equal sized
+
+    def test_ksegments_selective_vs_partial(self):
+        plan = AllocationPlan(starts=np.asarray([0.0, 10.0, 20.0]),
+                              peaks=np.asarray([2.0, 4.0, 6.0]))
+        sel = KSegments(k=3, variant="selective").retry(plan, 12.0, 5.0)
+        par = KSegments(k=3, variant="partial").retry(plan, 12.0, 5.0)
+        assert sel.peaks[1] > 4.0 and np.isclose(sel.peaks[2], 6.0)
+        assert par.peaks[1] > 4.0 and par.peaks[2] >= par.peaks[1]

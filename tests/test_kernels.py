@@ -1,0 +1,146 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wastage import wastage_eval_ref
+from repro.kernels import flash_attention, ssd_pallas, wastage_eval
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.ssd.ref import ssd_reference
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Skv,H,K,hd", [
+        (1, 128, 128, 4, 2, 64),
+        (2, 64, 192, 4, 4, 32),
+        (1, 256, 256, 8, 2, 16),
+        (2, 128, 128, 2, 1, 64),   # MQA
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_sweep_f32(self, B, Sq, Skv, H, K, hd, causal):
+        q = jnp.asarray(RNG.standard_normal((B, Sq, H, hd)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((B, Skv, K, hd)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((B, Skv, K, hd)), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal,
+                              block_q=64, block_k=64, interpret=True)
+        ref = jnp.moveaxis(mha_reference(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=causal), 1, 2)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q = jnp.asarray(RNG.standard_normal((1, 128, 4, 32)), dtype)
+        k = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)), dtype)
+        v = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)), dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+        ref = jnp.moveaxis(mha_reference(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=True), 1, 2)
+        np.testing.assert_allclose(out.astype(jnp.float32),
+                                   ref.astype(jnp.float32), **_tol(dtype))
+
+    def test_sliding_window(self):
+        q = jnp.asarray(RNG.standard_normal((1, 256, 2, 32)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((1, 256, 2, 32)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((1, 256, 2, 32)), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=64,
+                              block_q=64, block_k=64, interpret=True)
+        ref = jnp.moveaxis(mha_reference(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=True, window=64), 1, 2)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_unaligned_seq_padding(self):
+        q = jnp.asarray(RNG.standard_normal((1, 100, 2, 32)), jnp.float32)
+        k = jnp.asarray(RNG.standard_normal((1, 100, 2, 32)), jnp.float32)
+        v = jnp.asarray(RNG.standard_normal((1, 100, 2, 32)), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                              interpret=True)
+        ref = jnp.moveaxis(mha_reference(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=True), 1, 2)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+
+class TestSSD:
+    @pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+        (1, 128, 2, 16, 1, 32, 32),
+        (2, 256, 4, 64, 2, 64, 64),
+        (1, 96, 2, 32, 1, 16, 32),    # padded sequence
+        (1, 128, 8, 16, 4, 16, 128),  # single chunk
+    ])
+    def test_sweep(self, B, S, H, P, G, N, chunk):
+        X = jnp.asarray(RNG.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+        A = jnp.asarray(-np.abs(RNG.standard_normal((B, S, H))) * 0.3,
+                        jnp.float32)
+        Bm = jnp.asarray(RNG.standard_normal((B, S, G, N)) * 0.5, jnp.float32)
+        Cm = jnp.asarray(RNG.standard_normal((B, S, G, N)) * 0.5, jnp.float32)
+        y, st = ssd_pallas(X, A, Bm, Cm, chunk=chunk, interpret=True)
+        yr, sr = ssd_reference(
+            jnp.moveaxis(X, 1, 2), jnp.moveaxis(A, 1, 2),
+            jnp.moveaxis(Bm, 1, 2), jnp.moveaxis(Cm, 1, 2), chunk=chunk)
+        np.testing.assert_allclose(y, jnp.moveaxis(yr, 1, 2),
+                                   atol=5e-3, rtol=5e-3)
+        np.testing.assert_allclose(st, sr, atol=5e-3, rtol=5e-3)
+
+    def test_matches_sequential_recurrence(self):
+        """Chunked SSD == naive per-step recurrence (ground truth)."""
+        from repro.models.mamba2 import ssd_decode_step
+        B, S, H, P, G, N = 1, 32, 2, 8, 1, 8
+        X = jnp.asarray(RNG.standard_normal((B, S, H, P)) * 0.5, jnp.float32)
+        A = jnp.asarray(-np.abs(RNG.standard_normal((B, S, H))) * 0.3,
+                        jnp.float32)
+        Bm = jnp.asarray(RNG.standard_normal((B, S, G, N)) * 0.5, jnp.float32)
+        Cm = jnp.asarray(RNG.standard_normal((B, S, G, N)) * 0.5, jnp.float32)
+        y, st = ssd_pallas(X, A, Bm, Cm, chunk=16, interpret=True)
+        # sequential: state' = exp(a) state + B x ; y = C state'
+        state = np.zeros((B, H, P, N))
+        ys = []
+        for t in range(S):
+            a = np.asarray(A[:, t])                       # (B,H)
+            x = np.asarray(X[:, t])                       # (B,H,P)
+            b = np.repeat(np.asarray(Bm[:, t]), H // G, 1)  # (B,H,N)
+            c = np.repeat(np.asarray(Cm[:, t]), H // G, 1)
+            state = state * np.exp(a)[..., None, None] + \
+                np.einsum("bhn,bhp->bhpn", b, x)
+            ys.append(np.einsum("bhn,bhpn->bhp", c, state))
+        np.testing.assert_allclose(y, np.stack(ys, 1), atol=5e-3, rtol=5e-3)
+        np.testing.assert_allclose(st, state, atol=5e-3, rtol=5e-3)
+
+
+class TestWastageKernel:
+    @pytest.mark.parametrize("B,T,k", [(8, 512, 4), (16, 700, 8), (3, 64, 1)])
+    def test_sweep(self, B, T, k):
+        starts = np.sort(RNG.uniform(0, T * 0.8, (B, k)), axis=1)
+        starts[:, 0] = 0
+        peaks = np.sort(RNG.uniform(1, 10, (B, k)), axis=1)
+        mems = np.abs(RNG.normal(3, 1, (B, T)))
+        lengths = RNG.integers(T // 4, T, B)
+        out = np.asarray(wastage_eval(starts, peaks, mems, lengths,
+                                      dt=1.0, interpret=True))
+        ref = wastage_eval_ref(starts, peaks, mems, lengths, 1.0)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)
+
+    def test_non_monotone_plans(self):
+        """k-Segments plans can step DOWN; kernel must match the oracle."""
+        B, T, k = 6, 256, 4
+        starts = np.sort(RNG.uniform(0, 200, (B, k)), axis=1)
+        starts[:, 0] = 0
+        peaks = RNG.uniform(1, 10, (B, k))  # unordered
+        mems = np.abs(RNG.normal(2, 0.5, (B, T)))
+        lengths = np.full(B, T)
+        out = np.asarray(wastage_eval(starts, peaks, mems, lengths,
+                                      dt=1.0, interpret=True))
+        ref = wastage_eval_ref(starts, peaks, mems, lengths, 1.0)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)

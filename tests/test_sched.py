@@ -1,0 +1,137 @@
+"""Scheduler layer: paper-experiment simulator, cluster sim, elastic."""
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationPlan, KSPlus, ksplus_retry
+from repro.sched import (
+    ClusterSim,
+    ElasticPlanner,
+    Job,
+    Node,
+    evaluate_workflow,
+)
+from repro.traces import eager, sarek
+
+
+@pytest.fixture(scope="module")
+def eager_result():
+    return evaluate_workflow(eager(20), seed=0, train_frac=0.5, k=4)
+
+
+class TestPaperExperiment:
+    def test_ksplus_beats_peak_predictors(self, eager_result):
+        res = eager_result
+        assert res.methods["ks+"].total_gbs < res.methods["ppm-improved"].total_gbs
+        assert res.methods["ks+"].total_gbs < res.methods["tovar-ppm"].total_gbs
+        assert res.methods["ks+"].total_gbs < res.methods["default"].total_gbs
+
+    def test_ksplus_beats_ksegments(self, eager_result):
+        res = eager_result
+        assert res.methods["ks+"].total_gbs < \
+            res.methods["k-segments-selective"].total_gbs
+
+    def test_no_unsatisfiable_tasks(self, eager_result):
+        for mr in eager_result.methods.values():
+            assert mr.failures == 0, mr.name
+
+    def test_per_family_breakdown_sums(self, eager_result):
+        for mr in eager_result.methods.values():
+            assert np.isclose(sum(mr.per_family_gbs.values()), mr.total_gbs)
+
+    def test_sarek_runs(self):
+        res = evaluate_workflow(sarek(10), seed=1, train_frac=0.5, k=4,
+                                methods=["ks+", "ppm-improved"])
+        assert res.methods["ks+"].total_gbs < \
+            res.methods["ppm-improved"].total_gbs
+
+
+class TestClusterSim:
+    def _jobs(self, n, rng, plan_scale=1.1):
+        jobs = []
+        for j in range(n):
+            L = int(rng.integers(20, 60))
+            mem = np.abs(rng.normal(4, 0.5, L))
+            peak = mem.max()
+            plan = AllocationPlan(starts=np.zeros(1),
+                                  peaks=np.asarray([peak * plan_scale]))
+            jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
+                            dt=1.0, plan=plan, est_runtime=float(L)))
+        return jobs
+
+    def test_all_jobs_finish(self):
+        rng = np.random.default_rng(0)
+        sim = ClusterSim([Node(0, 64.0), Node(1, 64.0)])
+        jobs = self._jobs(12, rng)
+        res = sim.run(jobs, ksplus_retry)
+        assert res.unschedulable == 0
+        assert res.makespan > 0
+        assert res.avg_utilization > 0
+
+    def test_oom_triggers_retry(self):
+        rng = np.random.default_rng(1)
+        sim = ClusterSim([Node(0, 64.0)])
+        jobs = self._jobs(4, rng, plan_scale=0.7)  # under-allocated
+        res = sim.run(jobs, lambda p, t, u: p.with_(
+            peaks=np.maximum(p.peaks * 2, u * 1.1)))
+        assert res.retries > 0
+        assert res.unschedulable == 0
+
+    def test_tight_envelopes_increase_packing(self):
+        """KS+-style tight envelopes finish the same jobs sooner than
+        peak-sized allocations on a memory-constrained node: staggered
+        high-memory phases co-schedule under the time-varying residual."""
+        def jobs_with(env_kind):
+            jobs = []
+            for j in range(8):
+                L = 24 + 6 * j  # heterogeneous runtimes stagger the phases
+                split = int(0.7 * L)
+                mem = np.concatenate([np.full(split, 2.0),
+                                      np.full(L - split, 8.0)])
+                if env_kind == "tight":
+                    plan = AllocationPlan(
+                        starts=np.asarray([0.0, split - 2.0]),
+                        peaks=np.asarray([2.3, 9.0]))
+                else:
+                    plan = AllocationPlan(starts=np.zeros(1),
+                                          peaks=np.asarray([9.0]))
+                jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
+                                dt=1.0, plan=plan, est_runtime=float(L)))
+            return jobs
+        node_cap = 22.0
+        res_tight = ClusterSim([Node(0, node_cap)]).run(
+            jobs_with("tight"), ksplus_retry)
+        res_peak = ClusterSim([Node(0, node_cap)]).run(
+            jobs_with("peak"), ksplus_retry)
+        assert res_tight.makespan < res_peak.makespan
+        assert res_tight.total_wastage_gbs < res_peak.total_wastage_gbs
+        assert res_tight.retries == 0 and res_tight.unschedulable == 0
+
+
+class TestElastic:
+    def test_admission_and_churn(self):
+        pl_ = ElasticPlanner()
+        pl_.node_join("n0", 32.0)
+        pl_.node_join("n1", 32.0)
+        env = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([10.0]))
+        placed = [pl_.admit(f"j{i}", env, now=0.0) for i in range(6)]
+        assert all(p is not None for p in placed)
+        assert pl_.admit("j-over", AllocationPlan(
+            starts=np.zeros(1), peaks=np.asarray([40.0])), 0.0) is None
+        evicted = pl_.node_leave("n0")
+        assert len(evicted) > 0  # those jobs must checkpoint + requeue
+
+
+class TestHBMFootprint:
+    def test_envelope_prediction(self):
+        from repro.sched import HBMFootprintModel
+        m = HBMFootprintModel(k=2)
+        for toks in (1000, 2000, 4000, 8000):
+            env = np.concatenate([
+                np.full(10, 1.0 + toks / 4000),
+                np.full(10, 2.0 + toks / 2000)])
+            m.observe(toks, env)
+        m.fit()
+        plan = m.predict(6000)
+        assert plan.peaks[-1] > plan.peaks[0]
+        assert plan.peaks[-1] >= 2.0 + 6000 / 2000  # covers w/ offset

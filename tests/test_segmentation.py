@@ -1,0 +1,81 @@
+"""Algorithm 1 (segmentation): properties + oracle/JAX equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import get_segments, get_segments_ref
+
+traces = st.lists(
+    st.floats(min_value=0.0078125, max_value=100.0, allow_nan=False,
+              allow_infinity=False, width=32),
+    min_size=1, max_size=200,
+).map(np.asarray)
+
+
+@given(M=traces, k=st.integers(1, 10))
+@settings(max_examples=200, deadline=None)
+def test_envelope_properties(M, k):
+    S, P = get_segments_ref(M, k)
+    # 1. at most k segments, durations cover the trace exactly
+    assert 1 <= len(S) <= k
+    assert S.sum() == len(M)
+    assert np.all(S >= 1)
+    # 2. peaks strictly increasing (monotone envelope)
+    assert np.all(np.diff(P) > 0)
+    # 3. the step function upper-bounds the trace (no task failure)
+    bounds = np.repeat(P, S)
+    assert np.all(M <= bounds + 1e-9)
+    # 4. each segment's peak is attained (tight envelope)
+    edges = np.concatenate([[0], np.cumsum(S)])
+    for i in range(len(S)):
+        seg = M[edges[i]:edges[i + 1]]
+        assert np.isclose(seg.max(), P[i], rtol=1e-12)
+
+
+@given(M=traces, k=st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_jax_matches_reference(M, k):
+    S_ref, P_ref = get_segments_ref(M, k)
+    T = 1 << max((len(M) - 1).bit_length(), 4)
+    pad = np.zeros(T, np.float32)
+    pad[: len(M)] = M
+    S, P, n = get_segments(jnp.asarray(pad), jnp.int32(len(M)), k)
+    n = int(n)
+    assert n == len(S_ref)
+    np.testing.assert_array_equal(np.asarray(S)[:n], S_ref)
+    np.testing.assert_allclose(np.asarray(P)[:n], P_ref, rtol=1e-5)
+    # padding slots zeroed
+    assert np.all(np.asarray(S)[n:] == 0)
+
+
+def test_bwa_like_example():
+    """Fig. 1b / Fig. 2: long flat phase then a step is segmented exactly."""
+    M = np.concatenate([np.full(80, 5.1), np.full(20, 10.7)])
+    S, P = get_segments_ref(M, 2)
+    assert list(S) == [80, 20]
+    np.testing.assert_allclose(P, [5.1, 10.7])
+
+
+def test_merge_error_greedy():
+    """Merging always removes the smallest (P_{i+1}-P_i)*S_i pair first."""
+    M = np.asarray([1.0, 1.0, 1.0, 2.0, 10.0])  # e0 = 1*3, e1 = 8*1
+    S, P = get_segments_ref(M, 2)
+    # cheaper to merge the (1.0 x3) segment into the 2.0 one
+    assert list(S) == [4, 1]
+    np.testing.assert_allclose(P, [2.0, 10.0])
+
+
+def test_monotone_input_single_segment_when_k1():
+    M = np.linspace(1, 5, 50)
+    S, P = get_segments_ref(M, 1)
+    assert list(S) == [50]
+    np.testing.assert_allclose(P, [5.0])
+
+
+def test_invalid_inputs():
+    with pytest.raises(ValueError):
+        get_segments_ref(np.zeros((2, 2)), 2)
+    with pytest.raises(ValueError):
+        get_segments_ref(np.asarray([1.0]), 0)
