@@ -25,7 +25,14 @@ def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def _timed(fn, *args, repeat=3, **kw):
+def _timed(fn, *args, repeat=3, warmup=True, **kw):
+    """Mean wall time per call in µs, excluding a warmup call.
+
+    The warmup keeps JIT compilation (and other first-call setup) out of
+    the reported mean — perf numbers track the steady state across PRs.
+    """
+    if warmup:
+        fn(*args, **kw)
     t0 = time.perf_counter()
     for _ in range(repeat):
         out = fn(*args, **kw)
@@ -138,6 +145,74 @@ def bench_fig8_per_task(full: bool):
         json.dump({"ks+": ks, "k-segments-selective": base}, f, indent=1)
 
 
+# ----------------------------------------------------------------- fleet_sim
+def bench_fleet_sim(full: bool):
+    """Batched fleet engine vs the per-execution Python oracle.
+
+    Replays the fig6 workload (reduced scale: one seed, one training
+    fraction, more instances) through both paths and reports the speedup
+    plus the worst per-method wastage disagreement.
+    """
+    from repro.core import (
+        bucket_traces, concat_packed, packed_predict, simulate_execution,
+        simulate_fleet_many,
+    )
+    from repro.sched.simulator import _fit_methods, default_methods
+    from repro.traces import eager
+
+    machine = 128.0
+    wf = eager(200 if full else 150)
+    train, test = wf.split(0, 0.25, 1.0)
+    names = list(default_methods(4, machine, 8.0).keys())
+    fitted = _fit_methods(wf, train, names, 4, machine)
+    flat = [(f, e) for f in train for e in test[f]]
+    traces = bucket_traces([e.mem for _, e in flat])
+
+    def fleet_replay():
+        jobs = []
+        for mname in names:
+            parts = [
+                packed_predict(fitted[f][mname],
+                               [e.input_gb for e in test[f]])
+                for f in train if test[f]
+            ]
+            jobs.append((concat_packed(parts),
+                         fitted[next(iter(train))][mname].retry_spec))
+        return simulate_fleet_many(jobs, traces, 1.0,
+                                   machine_memory=machine)
+
+    def oracle_replay():
+        out = {}
+        for mname in names:
+            tot = 0.0
+            for f, e in flat:
+                m = fitted[f][mname]
+                tot += simulate_execution(
+                    m.predict(e.input_gb), m.retry, e.mem, e.dt,
+                    machine_memory=machine).wastage_gbs
+            out[mname] = tot
+        return out
+
+    fres, us_f = _timed(fleet_replay, repeat=3)
+    ores, us_o = _timed(oracle_replay, repeat=1, warmup=False)
+    totals_f = {m: float(fr.wastage_gbs.sum()) for m, fr in zip(names, fres)}
+    err = max(abs(totals_f[m] - ores[m]) / ores[m] for m in names)
+
+    def reduction(tot):
+        best = min(v for k, v in tot.items() if not k.startswith("ks+"))
+        return (best - tot["ks+"]) / best
+
+    red_f, red_o = reduction(totals_f), reduction(ores)
+    _row("fleet_sim_speedup", us_f,
+         f"{us_o / us_f:.1f}x vs oracle (target >=10x)")
+    _row("fleet_sim_oracle_us", us_o,
+         f"{len(flat)} execs x {len(names)} methods")
+    _row("fleet_sim_max_rel_err", 0.0, f"{100 * err:.3f}% (target <1%)")
+    _row("fleet_sim_reduction_match", 0.0,
+         f"fleet {100 * red_f:.1f}% vs oracle {100 * red_o:.1f}% "
+         f"(ks+ vs best baseline)")
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(full: bool):
     """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
@@ -173,6 +248,13 @@ def bench_kernels(full: bool):
         wastage_eval(starts, peaks, mems, lens, interpret=True)))
     _, us_r = _timed(lambda: wastage_eval_ref(starts, peaks, mems, lens, 1.0))
     _row("kernel_wastage_64x1024_interpret", us_k, f"ref_np={us_r:.0f}us")
+
+    from repro.kernels.wastage.ops import oom_probe
+    from repro.core.wastage import oom_probe_ref
+    _, us_k = _timed(lambda: jax.block_until_ready(
+        oom_probe(starts, peaks, mems, lens, interpret=True)))
+    _, us_r = _timed(lambda: oom_probe_ref(starts, peaks, mems, lens, 1.0))
+    _row("kernel_oom_probe_64x1024_interpret", us_k, f"ref_np={us_r:.0f}us")
 
     # batched JAX segmentation (the fleet-scale path)
     from repro.core import get_segments
@@ -214,6 +296,7 @@ BENCHES = {
     "fig6": bench_fig6_wastage,
     "fig7": bench_fig7_segments,
     "fig8": bench_fig8_per_task,
+    "fleet_sim": bench_fleet_sim,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }
@@ -224,11 +307,28 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--json", default="BENCH_fleet.json",
+                    help="machine-readable dump (name -> us_per_call)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
+    for n in names:
+        if n not in BENCHES:
+            ap.error(f"unknown benchmark {n!r} (choose from {','.join(BENCHES)})")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n](args.full)
+    # Merge into the existing dump so `--only` subset runs refresh their own
+    # rows without clobbering the rest of the perf trajectory.
+    dump = {}
+    if os.path.exists(args.json):
+        try:
+            with open(args.json) as f:
+                dump = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            dump = {}
+    dump.update({name: us for name, us, _ in RESULTS})
+    with open(args.json, "w") as f:
+        json.dump(dump, f, indent=1)
 
 
 if __name__ == "__main__":

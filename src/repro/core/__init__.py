@@ -17,6 +17,22 @@ from repro.core.allocation import (
     first_violation,
 )
 from repro.core.baselines import DefaultMethod, KSegments, PPMImproved, TovarPPM
+from repro.core.fleet import (
+    FleetBatch,
+    FleetResult,
+    PackedTraces,
+    RetrySpec,
+    TraceBucket,
+    bucket_traces,
+    concat_packed,
+    first_attempt,
+    fleet_eval,
+    pack_plans,
+    pack_traces,
+    packed_predict,
+    simulate_fleet,
+    simulate_fleet_many,
+)
 from repro.core.ksplus import KSPlus, KSPlusAuto, MemoryPredictor
 from repro.core.predictor import (
     LinReg,
@@ -37,6 +53,7 @@ from repro.core.segmentation import get_segments, get_segments_ref, segments_to_
 from repro.core.wastage import (
     AttemptRecord,
     ExecutionResult,
+    oom_probe_ref,
     simulate_execution,
     wastage_eval_ref,
 )
@@ -44,11 +61,16 @@ from repro.core.wastage import (
 __all__ = [
     "AllocationPlan", "alloc_at", "alloc_series", "first_violation",
     "DefaultMethod", "KSegments", "PPMImproved", "TovarPPM",
+    "FleetBatch", "FleetResult", "PackedTraces", "RetrySpec", "TraceBucket",
+    "bucket_traces", "concat_packed", "first_attempt", "fleet_eval",
+    "pack_plans", "pack_traces", "packed_predict", "simulate_fleet",
+    "simulate_fleet_many",
     "KSPlus", "KSPlusAuto", "MemoryPredictor",
     "LinReg", "SegmentModel", "fit_linreg", "fit_segment_model",
     "predict_plan", "predict_runtime",
     "double_retry", "ksegments_partial_retry", "ksegments_selective_retry",
     "ksplus_retry", "max_machine_retry",
     "get_segments", "get_segments_ref", "segments_to_starts",
-    "AttemptRecord", "ExecutionResult", "simulate_execution", "wastage_eval_ref",
+    "AttemptRecord", "ExecutionResult", "simulate_execution",
+    "wastage_eval_ref", "oom_probe_ref",
 ]

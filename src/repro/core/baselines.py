@@ -20,6 +20,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.allocation import AllocationPlan
+from repro.core.fleet import RetrySpec
 from repro.core.predictor import LinReg, fit_linreg
 from repro.core.retry import (
     double_retry,
@@ -60,9 +61,17 @@ class TovarPPM:
     def predict(self, input_size: float) -> AllocationPlan:
         return _constant_plan(self._first_alloc)
 
+    def predict_packed(self, inputs: np.ndarray):
+        B = len(inputs)
+        return np.zeros((B, 1)), np.full((B, 1), self._first_alloc)
+
     def retry(self, plan, t_fail, used) -> AllocationPlan:
         return max_machine_retry(plan, t_fail, used,
                                  machine_memory=self.machine_memory)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec("max-machine")
 
 
 @dataclasses.dataclass
@@ -80,8 +89,15 @@ class PPMImproved:
     def predict(self, input_size: float) -> AllocationPlan:
         return self._inner.predict(input_size)
 
+    def predict_packed(self, inputs: np.ndarray):
+        return self._inner.predict_packed(inputs)
+
     def retry(self, plan, t_fail, used) -> AllocationPlan:
         return double_retry(plan, t_fail, used, cap=self.machine_memory)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec("double")
 
 
 @dataclasses.dataclass
@@ -126,12 +142,30 @@ class KSegments:
         )
         return AllocationPlan(starts=starts, peaks=peaks)
 
+    def predict_packed(self, inputs: np.ndarray):
+        """Vectorized predict — elementwise bit-identical to per-input calls
+        (the regression runs in its own dtype, the runtime math in float64,
+        exactly like the scalar path's promotions)."""
+        I = np.asarray(inputs, self._runtime_reg.slope.dtype)
+        rt = self._runtime_reg(I).astype(np.float64)
+        rt = np.maximum(rt, 0.0) * (1.0 - self.runtime_offset)
+        starts = np.arange(self.k, dtype=np.float64)[None, :] \
+            * (rt[:, None] / self.k)
+        peaks = self._peak_reg.slope[None, :] * I[:, None] \
+            + self._peak_reg.intercept[None, :]
+        peaks = np.maximum(peaks * (1.0 + self.peak_offset), 1e-6)
+        return starts, peaks
+
     def retry(self, plan, t_fail, used) -> AllocationPlan:
         if self.variant == "selective":
             return ksegments_selective_retry(plan, t_fail, used,
                                              margin=self.peak_offset)
         return ksegments_partial_retry(plan, t_fail, used,
                                        margin=self.peak_offset)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec(f"kseg-{self.variant}", margin=self.peak_offset)
 
 
 @dataclasses.dataclass
@@ -148,5 +182,13 @@ class DefaultMethod:
     def predict(self, input_size: float) -> AllocationPlan:
         return _constant_plan(self.limit_gb)
 
+    def predict_packed(self, inputs: np.ndarray):
+        B = len(inputs)
+        return np.zeros((B, 1)), np.full((B, 1), float(self.limit_gb))
+
     def retry(self, plan, t_fail, used) -> AllocationPlan:
         return double_retry(plan, t_fail, used, cap=self.machine_memory)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec("double")

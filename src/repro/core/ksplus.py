@@ -20,10 +20,12 @@ from typing import Optional, Protocol, Sequence
 import numpy as np
 
 from repro.core.allocation import AllocationPlan
+from repro.core.fleet import RetrySpec
 from repro.core.predictor import (
     SegmentModel,
     fit_segment_model,
     predict_plan,
+    predict_plans_packed,
     predict_runtime,
 )
 from repro.core.retry import ksplus_retry
@@ -32,7 +34,12 @@ __all__ = ["MemoryPredictor", "KSPlus", "KSPlusAuto"]
 
 
 class MemoryPredictor(Protocol):
-    """fit/predict/retry protocol shared by KS+ and all baselines."""
+    """fit/predict/retry protocol shared by KS+ and all baselines.
+
+    ``retry_spec`` is the static, batchable description of ``retry`` used by
+    the fleet engine (:mod:`repro.core.fleet`); ``retry`` itself remains the
+    per-plan oracle.
+    """
 
     name: str
 
@@ -43,6 +50,9 @@ class MemoryPredictor(Protocol):
 
     def retry(self, plan: AllocationPlan, t_fail: float,
               used: float) -> AllocationPlan: ...
+
+    @property
+    def retry_spec(self) -> RetrySpec: ...
 
 
 @dataclasses.dataclass
@@ -78,6 +88,10 @@ class KSPlus:
     def predict(self, input_size: float) -> AllocationPlan:
         return predict_plan(self.model, input_size)
 
+    def predict_packed(self, inputs: np.ndarray):
+        """Vectorized predict: (starts, peaks) of shape (B, k)."""
+        return predict_plans_packed(self.model, inputs)
+
     def predict_runtime(self, input_size: float) -> float:
         return predict_runtime(self.model, input_size)
 
@@ -85,6 +99,10 @@ class KSPlus:
               used: float) -> AllocationPlan:
         return ksplus_retry(plan, t_fail, used,
                             last_peak_bump=self.last_peak_bump)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec("ksplus", bump=self.last_peak_bump)
 
 
 @dataclasses.dataclass
@@ -94,8 +112,13 @@ class KSPlusAuto:
     The paper's stated future work ("dynamically determine the optimal
     number of segments for each task"): fit one KS+ model per candidate k,
     replay the *training* executions through the OOM/retry simulator, and
-    keep the k with the lowest training wastage.  Costs |K| extra fits at
-    training time; prediction/retry are unchanged.
+    keep the k with the lowest training wastage.
+
+    The replay runs on the batched fleet engine with the candidate axis
+    folded into the lane batch — one XLA program evaluates every
+    ``(candidate k, training execution)`` pair at once instead of |K|
+    serial Python replays.  Set ``engine="oracle"`` to fall back to the
+    per-execution loop (heterogeneous ``dt`` values also fall back).
     """
 
     candidates: Sequence[int] = (2, 3, 4, 6, 8)
@@ -103,33 +126,76 @@ class KSPlusAuto:
     start_offset: float = 0.15
     last_peak_bump: float = 0.20
     machine_memory: float = 128.0
+    engine: str = "fleet"
     name: str = "ks+auto"
     chosen_k: Optional[int] = None
     _model: Optional[KSPlus] = dataclasses.field(default=None, repr=False)
 
     def fit(self, mems, dts, inputs) -> None:
-        from repro.core.wastage import simulate_execution  # cycle-free import
-        best = (np.inf, None, None)
+        models = []
         for k in self.candidates:
             m = KSPlus(k=k, peak_offset=self.peak_offset,
                        start_offset=self.start_offset,
                        last_peak_bump=self.last_peak_bump)
             m.fit(mems, dts, inputs)
+            models.append(m)
+
+        uniform_dt = len(set(float(d) for d in dts)) == 1
+        if self.engine == "fleet" and uniform_dt:
+            totals = self._training_wastage_fleet(models, mems, dts, inputs)
+        else:
+            totals = self._training_wastage_oracle(models, mems, dts, inputs)
+
+        best = (np.inf, None, None)
+        for k, m, total in zip(self.candidates, models, totals):
+            if total < best[0]:
+                best = (total, k, m)
+        _, self.chosen_k, self._model = best
+
+    def _training_wastage_fleet(self, models, mems, dts, inputs):
+        """One engine call: candidates become an extra lane-batch axis."""
+        from repro.core.fleet import concat_packed, packed_predict, \
+            simulate_fleet
+        packed = concat_packed(
+            [packed_predict(m, inputs) for m in models])
+        fr = simulate_fleet(
+            packed, RetrySpec("ksplus", bump=self.last_peak_bump),
+            list(mems) * len(models), float(dts[0]),
+            machine_memory=self.machine_memory)
+        return fr.wastage_gbs.reshape(len(models), len(inputs)).sum(axis=1)
+
+    def _training_wastage_oracle(self, models, mems, dts, inputs):
+        from repro.core.wastage import simulate_execution  # cycle-free import
+        totals = []
+        for m in models:
             total = 0.0
             for mem, dt, inp in zip(mems, dts, inputs):
                 res = simulate_execution(
                     m.predict(inp), m.retry, mem, dt,
                     machine_memory=self.machine_memory)
                 total += res.wastage_gbs
-            if total < best[0]:
-                best = (total, k, m)
-        _, self.chosen_k, self._model = best
+            totals.append(total)
+        return totals
+
+    @property
+    def model(self) -> KSPlus:
+        if self._model is None:
+            raise RuntimeError(
+                "KSPlusAuto.fit() must be called before predict()")
+        return self._model
 
     def predict(self, input_size: float) -> AllocationPlan:
-        return self._model.predict(input_size)
+        return self.model.predict(input_size)
+
+    def predict_packed(self, inputs: np.ndarray):
+        return self.model.predict_packed(inputs)
 
     def predict_runtime(self, input_size: float) -> float:
-        return self._model.predict_runtime(input_size)
+        return self.model.predict_runtime(input_size)
 
     def retry(self, plan, t_fail, used) -> AllocationPlan:
-        return self._model.retry(plan, t_fail, used)
+        return self.model.retry(plan, t_fail, used)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return self.model.retry_spec

@@ -37,6 +37,7 @@ __all__ = [
     "SegmentModel",
     "fit_segment_model",
     "predict_plan",
+    "predict_plans_packed",
 ]
 
 
@@ -173,6 +174,27 @@ def predict_plan(model: SegmentModel, input_size: float) -> AllocationPlan:
     starts[0] = 0.0
     peaks = np.maximum.accumulate(np.maximum(peaks, 1e-6))
     return AllocationPlan(starts=starts, peaks=peaks)
+
+
+def predict_plans_packed(model: SegmentModel, inputs: np.ndarray):
+    """Vectorized :func:`predict_plan` over a batch of input sizes.
+
+    Returns ``(starts, peaks)`` of shape (B, k), elementwise *bit-identical*
+    to per-input calls — the input batch is cast to the regression dtype so
+    broadcasting reproduces the scalar path's promotion (NumPy keeps python
+    scalars "weak", so per-plan math runs in the slope's dtype).  The fleet
+    engine consumes these without building plan objects.
+    """
+    I = np.asarray(inputs, model.start_reg.slope.dtype)[:, None]
+    starts = (model.start_reg.slope[None, :] * I
+              + model.start_reg.intercept[None, :]) \
+        * (1.0 - model.start_offset)
+    peaks = (model.peak_reg.slope[None, :] * I
+             + model.peak_reg.intercept[None, :]) * (1.0 + model.peak_offset)
+    starts = np.maximum.accumulate(np.maximum(starts, 0.0), axis=1)
+    starts[:, 0] = 0.0
+    peaks = np.maximum.accumulate(np.maximum(peaks, 1e-6), axis=1)
+    return starts, peaks
 
 
 def predict_runtime(model: SegmentModel, input_size: float,

@@ -33,6 +33,10 @@ def ksplus_retry(plan: AllocationPlan, t_fail: float, used: float,
         factor = t_fail / nxt if nxt > 0 else 0.0
         starts = plan.starts.copy()
         starts[j + 1:] = starts[j + 1:] * factor
+        # The rule is "the next segment begins exactly at the failure time";
+        # nxt * (t_fail / nxt) can round one ulp *above* t_fail, which would
+        # leave the killed sample uncovered and re-fail it, so assign exactly.
+        starts[j + 1] = t_fail
         # Re-timing keeps ordering (scaling by a common factor) and keeps
         # starts[0] == 0; clip for numeric safety.
         starts = np.maximum.accumulate(np.maximum(starts, 0.0))

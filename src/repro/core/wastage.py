@@ -22,7 +22,12 @@ import numpy as np
 
 from repro.core.allocation import AllocationPlan, alloc_series, first_violation
 
-__all__ = ["AttemptRecord", "ExecutionResult", "simulate_execution"]
+__all__ = [
+    "AttemptRecord",
+    "ExecutionResult",
+    "simulate_execution",
+    "oom_probe_ref",
+]
 
 RetryFn = Callable[[AllocationPlan, float, float], AllocationPlan]
 
@@ -111,3 +116,42 @@ def wastage_eval_ref(
     alloc = np.maximum(alloc, mems)  # successful attempt ⇒ alloc >= used
     valid = (np.arange(T)[None, :] < lengths[:, None]).astype(np.float64)
     return ((alloc - mems) * valid).sum(axis=1) * dt
+
+
+def oom_probe_ref(
+    starts: np.ndarray,
+    peaks: np.ndarray,
+    mems: np.ndarray,
+    lengths: np.ndarray,
+    dt: float,
+):
+    """Batched one-attempt OOM probe: oracle for the extended Pallas kernel.
+
+    For every lane evaluates the plan against the trace once and returns
+
+      viol:   (B,) int32  — first sample index with ``mem > alloc``, or -1,
+      w_succ: (B,) float  — wastage assuming the attempt succeeds
+                            (``max(alloc, mem) − mem`` integrated),
+      w_kill: (B,) float  — wastage if the attempt is killed at ``viol``
+                            (all allocation up to and including the kill
+                            sample), 0 where ``viol < 0``.
+    """
+    B, T = mems.shape
+    mems = np.asarray(mems, np.float64)
+    t = np.arange(T, dtype=np.float64) * dt
+    idx = np.stack([
+        np.clip(np.searchsorted(s, t, side="right") - 1, 0, len(s) - 1)
+        for s in np.asarray(starts, np.float64)
+    ])
+    alloc = np.take_along_axis(np.asarray(peaks, np.float64), idx, axis=1)
+    valid = np.arange(T)[None, :] < lengths[:, None]
+    bad = (mems > alloc) & valid
+    any_v = bad.any(axis=1)
+    vidx = bad.argmax(axis=1)
+    viol = np.where(any_v, vidx, -1).astype(np.int32)
+    w_succ = ((np.maximum(alloc, mems) - mems) * valid).sum(axis=1) * dt
+    prefix = np.cumsum(alloc * valid, axis=1)
+    w_kill = np.where(
+        any_v, np.take_along_axis(prefix, vidx[:, None], axis=1)[:, 0], 0.0
+    ) * dt
+    return viol, w_succ, w_kill

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["wastage_kernel", "wastage_call"]
+__all__ = ["wastage_kernel", "wastage_call", "oom_probe_kernel", "oom_probe_call"]
 
 
 def wastage_kernel(starts_ref, peaks_ref, mem_ref, len_ref, out_ref, acc_scr,
@@ -40,14 +40,7 @@ def wastage_kernel(starts_ref, peaks_ref, mem_ref, len_ref, out_ref, acc_scr,
 
     t_idx = tb * block_t + jax.lax.iota(jnp.int32, block_t)
     t = t_idx.astype(jnp.float32) * dt
-    # alloc(t) = peaks[max { i : starts_i <= t }] — one-hot interval select.
-    active = starts[None, :] <= t[:, None]          # (block_t, k)
-    # last active index == argmax of cumulative count; peaks are monotone
-    # for KS+ but NOT for k-Segments, so select by interval, not by max.
-    nxt = jnp.concatenate([starts[1:], jnp.full((1,), jnp.inf)])
-    in_seg = active & (t[:, None] < nxt[None, :])
-    alloc = jnp.sum(jnp.where(in_seg, peaks[None, :], 0.0), axis=1)
-    alloc = jnp.where(jnp.any(in_seg, axis=1), alloc, peaks[0])
+    alloc = _alloc_block(starts, peaks, t)
     alloc = jnp.maximum(alloc, mem)                 # successful attempt
     valid = (t_idx < length).astype(jnp.float32)
     acc_scr[...] = acc_scr[...] + jnp.sum((alloc - mem) * valid) * dt
@@ -55,6 +48,111 @@ def wastage_kernel(starts_ref, peaks_ref, mem_ref, len_ref, out_ref, acc_scr,
     @pl.when(tb == ntb - 1)
     def _flush():
         out_ref[0] = acc_scr[...].astype(out_ref.dtype)
+
+
+def _alloc_block(starts, peaks, t):
+    """Step-function allocation on a time block via one-hot interval select.
+
+    Duplicate starts yield empty intervals, so the *last* segment with
+    ``start <= t`` wins — matching ``np.searchsorted(side='right') - 1``.
+    Padded plan slots carry a huge sentinel start and are never active.
+    """
+    active = starts[None, :] <= t[:, None]           # (block_t, k)
+    nxt = jnp.concatenate([starts[1:], jnp.full((1,), jnp.inf)])
+    in_seg = active & (t[:, None] < nxt[None, :])
+    alloc = jnp.sum(jnp.where(in_seg, peaks[None, :], 0.0), axis=1)
+    return jnp.where(jnp.any(in_seg, axis=1), alloc, peaks[0])
+
+
+def oom_probe_kernel(starts_ref, peaks_ref, mem_ref, len_ref,
+                     viol_ref, wsucc_ref, wkill_ref,
+                     acc_scr, viol_scr, *, block_t: int, dt: float):
+    """One OOM/retry attempt, fused: first violation + both wastage modes.
+
+    Per execution lane emits the first sample index where demand exceeds the
+    allocation (-1 if none), the successful-attempt wastage
+    (``max(alloc, mem) − mem`` integrated over valid samples) and the
+    killed-attempt wastage (all allocation up to and including the kill
+    sample).  The fleet engine's retry loop consumes all three, so one kernel
+    pass replaces the per-execution ``first_violation`` + ``alloc_series``
+    pair of the Python oracle.
+
+    acc_scr: (3,) f32 scratch = [succ wastage, cumulative alloc, kill wastage]
+    viol_scr: () i32 scratch  = first violation index so far (-1 = none)
+    """
+    tb = pl.program_id(1)
+    ntb = pl.num_programs(1)
+
+    @pl.when(tb == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        viol_scr[...] = jnp.full((), -1, jnp.int32)
+
+    starts = starts_ref[0].astype(jnp.float32)      # (k,)
+    peaks = peaks_ref[0].astype(jnp.float32)        # (k,)
+    mem = mem_ref[0].astype(jnp.float32)            # (block_t,)
+    length = len_ref[0]                             # scalar int32
+
+    t_idx = tb * block_t + jax.lax.iota(jnp.int32, block_t)
+    t = t_idx.astype(jnp.float32) * dt
+    alloc = _alloc_block(starts, peaks, t)
+    validb = t_idx < length
+    valid = validb.astype(jnp.float32)
+
+    bad = (mem > alloc) & validb
+    any_v = jnp.any(bad)
+    idx_in = jnp.argmax(bad)                        # first True in block
+    local = jax.lax.iota(jnp.int32, block_t)
+    # inclusive prefix of allocation up to the in-block kill sample, as a
+    # masked sum (dynamic vector gather is not TPU-friendly)
+    upto = jnp.sum(alloc * valid * (local <= idx_in).astype(jnp.float32))
+    fresh = (viol_scr[...] < 0) & any_v
+    viol_scr[...] = jnp.where(fresh, tb * block_t + idx_in, viol_scr[...])
+    acc_scr[2] = jnp.where(fresh, acc_scr[1] + upto, acc_scr[2])
+    acc_scr[1] = acc_scr[1] + jnp.sum(alloc * valid)
+    acc_scr[0] = acc_scr[0] + jnp.sum((jnp.maximum(alloc, mem) - mem) * valid)
+
+    @pl.when(tb == ntb - 1)
+    def _flush():
+        viol_ref[0] = viol_scr[...]
+        wsucc_ref[0] = (acc_scr[0] * dt).astype(wsucc_ref.dtype)
+        wkill_ref[0] = (acc_scr[2] * dt).astype(wkill_ref.dtype)
+
+
+def oom_probe_call(starts, peaks, mems, lengths, *, dt: float,
+                   block_t: int = 512, interpret: bool = False):
+    """starts/peaks: (B, k); mems: (B, T); lengths: (B,).
+
+    Returns ``(viol, w_succ, w_kill)``, each (B,).
+    """
+    B, k = starts.shape
+    T = mems.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    grid = (B, T // block_t)
+    kernel = functools.partial(oom_probe_kernel, block_t=block_t, dt=dt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t: (b, 0)),
+            pl.BlockSpec((1, block_t), lambda b, t: (b, t)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((3,), jnp.float32),
+                        pltpu.VMEM((), jnp.int32)],
+        interpret=interpret,
+    )(starts, peaks, mems, lengths)
 
 
 def wastage_call(starts, peaks, mems, lengths, *, dt: float,

@@ -7,9 +7,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.wastage.kernel import wastage_call
+from repro.kernels.wastage.kernel import oom_probe_call, wastage_call
 
-__all__ = ["wastage_eval"]
+__all__ = ["wastage_eval", "oom_probe"]
 
 
 @functools.partial(jax.jit, static_argnames=("dt", "block_t", "interpret"))
@@ -27,6 +27,28 @@ def wastage_eval(starts, peaks, mems, lengths, dt: float = 1.0,
     if pad:
         mems = jnp.pad(mems, ((0, 0), (0, pad)))
     return wastage_call(
+        jnp.asarray(starts, jnp.float32), jnp.asarray(peaks, jnp.float32),
+        jnp.asarray(mems, jnp.float32), jnp.asarray(lengths, jnp.int32),
+        dt=dt, block_t=bt, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dt", "block_t", "interpret"))
+def oom_probe(starts, peaks, mems, lengths, dt: float = 1.0,
+              block_t: int = 512, interpret=None):
+    """Fused single-attempt OOM probe (fleet-engine inner step).
+
+    starts/peaks: (B, k) float; mems: (B, T) float; lengths: (B,) int32.
+    Returns ``(viol, w_succ, w_kill)`` — first violating sample index (or
+    -1), successful-attempt wastage, and killed-attempt wastage, each (B,).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T = mems.shape
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        mems = jnp.pad(mems, ((0, 0), (0, pad)))
+    return oom_probe_call(
         jnp.asarray(starts, jnp.float32), jnp.asarray(peaks, jnp.float32),
         jnp.asarray(mems, jnp.float32), jnp.asarray(lengths, jnp.int32),
         dt=dt, block_t=bt, interpret=interpret)

@@ -1,5 +1,5 @@
-"""Oracle for the wastage kernel: the core's numpy implementation."""
+"""Oracles for the wastage kernels: the core's numpy implementations."""
 
-from repro.core.wastage import wastage_eval_ref
+from repro.core.wastage import oom_probe_ref, wastage_eval_ref
 
-__all__ = ["wastage_eval_ref"]
+__all__ = ["wastage_eval_ref", "oom_probe_ref"]

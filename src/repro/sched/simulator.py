@@ -3,6 +3,13 @@
 Fits every method per task family on the training split, replays the test
 split through the OOM/retry simulator, and aggregates GB·s wastage —
 reproducing the comparisons behind Figs. 6–8.
+
+The replay runs on the batched fleet engine (:mod:`repro.core.fleet`) by
+default: the entire workflow's test split becomes one ``(B, T)`` lane batch
+per method and the whole OOM/retry protocol executes inside a single jitted
+XLA program, instead of ``families × executions × attempts`` Python-level
+numpy calls.  ``engine="oracle"`` keeps the original per-execution loop —
+it is the ground truth the engine is differentially tested against.
 """
 
 from __future__ import annotations
@@ -19,7 +26,11 @@ from repro.core import (
     KSPlusAuto,
     PPMImproved,
     TovarPPM,
+    bucket_traces,
+    concat_packed,
+    packed_predict,
     simulate_execution,
+    simulate_fleet_many,
 )
 from repro.traces.generator import Execution, Workflow
 
@@ -64,6 +75,23 @@ def default_methods(k: int, machine_memory: float,
     }
 
 
+def _fit_methods(wf: Workflow, train, names, k, machine_memory):
+    """Fit every method on every family's training split."""
+    fitted: Dict[str, Dict[str, object]] = {}
+    for fname, train_execs in train.items():
+        fam = wf.families[fname]
+        zoo = default_methods(k, machine_memory, fam.default_limit_gb)
+        mems = [e.mem for e in train_execs]
+        dts = [e.dt for e in train_execs]
+        inputs = [e.input_gb for e in train_execs]
+        fitted[fname] = {}
+        for mname in names:
+            method = zoo[mname]()
+            method.fit(mems, dts, inputs)
+            fitted[fname][mname] = method
+    return fitted
+
+
 def evaluate_workflow(
     wf: Workflow,
     *,
@@ -73,34 +101,77 @@ def evaluate_workflow(
     machine_memory: float = 128.0,
     methods: Optional[List[str]] = None,
     dt: float = 1.0,
+    engine: str = "fleet",
 ) -> ExperimentResult:
+    """Fit + replay one (workflow, seed, train fraction) cell.
+
+    ``engine="fleet"`` (default) runs the replay on the batched engine —
+    one jitted OOM/retry program per method over the *whole* test split;
+    ``engine="oracle"`` replays execution-by-execution through
+    :func:`simulate_execution`.
+    """
+    if engine not in ("fleet", "oracle"):
+        raise ValueError(f"unknown engine: {engine!r}")
     train, test = wf.split(seed, train_frac, dt)
     names = methods or list(default_methods(k, machine_memory, 8.0).keys())
     results: Dict[str, MethodResult] = {
         m: MethodResult(m, {}, 0.0, 0, 0) for m in names
     }
+    fitted = _fit_methods(wf, train, names, k, machine_memory)
 
-    for fname, train_execs in train.items():
-        fam = wf.families[fname]
-        zoo = default_methods(k, machine_memory, fam.default_limit_gb)
-        mems = [e.mem for e in train_execs]
-        dts = [e.dt for e in train_execs]
-        inputs = [e.input_gb for e in train_execs]
-        for mname in names:
-            method = zoo[mname]()
-            method.fit(mems, dts, inputs)
-            fam_gbs = 0.0
-            for e in test[fname]:
-                plan = method.predict(e.input_gb)
-                res = simulate_execution(
-                    plan, method.retry, e.mem, e.dt,
-                    machine_memory=machine_memory,
-                )
-                fam_gbs += res.wastage_gbs
-                results[mname].retries += res.num_retries
-                results[mname].failures += 0 if res.succeeded else 1
-            results[mname].per_family_gbs[fname] = fam_gbs
-            results[mname].total_gbs += fam_gbs
+    if engine == "oracle":
+        for fname in train:
+            for mname in names:
+                method = fitted[fname][mname]
+                fam_gbs = 0.0
+                for e in test[fname]:
+                    plan = method.predict(e.input_gb)
+                    res = simulate_execution(
+                        plan, method.retry, e.mem, e.dt,
+                        machine_memory=machine_memory,
+                    )
+                    fam_gbs += res.wastage_gbs
+                    results[mname].retries += res.num_retries
+                    results[mname].failures += 0 if res.succeeded else 1
+                results[mname].per_family_gbs[fname] = fam_gbs
+                results[mname].total_gbs += fam_gbs
+        return ExperimentResult(wf.name, seed, train_frac, results)
+
+    # Fleet path: flatten the whole test split into one lane batch, bucketed
+    # once and shared across methods; ALL methods replay in two dispatches.
+    flat = [(fname, e) for fname in train for e in test[fname]]
+    for mname in names:
+        for fname in train:
+            results[mname].per_family_gbs[fname] = 0.0
+    if not flat:
+        return ExperimentResult(wf.name, seed, train_frac, results)
+    assert len({e.dt for _, e in flat}) == 1, "fleet engine needs uniform dt"
+    traces = bucket_traces([e.mem for _, e in flat])
+    fam_idx = np.asarray(
+        [list(train).index(fname) for fname, _ in flat], np.int64)
+
+    jobs = []
+    for mname in names:
+        # Vectorized per-family prediction, concatenated in flat-lane order.
+        parts = [
+            packed_predict(fitted[fname][mname],
+                           [e.input_gb for e in test[fname]])
+            for fname in train if test[fname]
+        ]
+        specs = {fitted[fname][mname].retry_spec for fname in train}
+        assert len(specs) == 1, f"{mname}: retry spec differs across families"
+        jobs.append((concat_packed(parts), specs.pop()))
+    fleet = simulate_fleet_many(
+        jobs, traces, flat[0][1].dt, machine_memory=machine_memory)
+
+    for mname, fr in zip(names, fleet):
+        per_fam = np.zeros(len(train))
+        np.add.at(per_fam, fam_idx, fr.wastage_gbs)
+        for i, fname in enumerate(train):
+            results[mname].per_family_gbs[fname] = float(per_fam[i])
+        results[mname].total_gbs = float(fr.wastage_gbs.sum())
+        results[mname].retries = int(fr.retries.sum())
+        results[mname].failures = int((~fr.succeeded).sum())
 
     return ExperimentResult(wf.name, seed, train_frac, results)
 
@@ -114,6 +185,7 @@ def run_paper_experiment(
     machine_memory: float = 128.0,
     methods: Optional[List[str]] = None,
     dt: float = 1.0,
+    engine: str = "fleet",
 ):
     """Fig. 6 protocol: 10 seeds × {25, 50, 75}% training data, averaged."""
     out: Dict[float, Dict[str, float]] = {}
@@ -123,6 +195,7 @@ def run_paper_experiment(
             res = evaluate_workflow(
                 wf, seed=seed, train_frac=frac, k=k,
                 machine_memory=machine_memory, methods=methods, dt=dt,
+                engine=engine,
             )
             for name, mr in res.methods.items():
                 acc.setdefault(name, []).append(mr.total_gbs)

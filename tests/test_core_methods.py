@@ -1,8 +1,11 @@
-"""Predictor, retry strategies, wastage metric, baselines."""
+"""Predictor, retry strategies, wastage metric, baselines.
+
+Property tests use hypothesis when installed (see ``requirements-dev.txt``)
+and a deterministic grid sweep otherwise.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     AllocationPlan,
@@ -16,6 +19,12 @@ from repro.core import (
     ksplus_retry,
     simulate_execution,
 )
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 
 def _linear_traces(n=30, seed=0, noise=0.02):
@@ -86,13 +95,22 @@ class TestRetry:
         assert np.isclose(new.starts[1], 0.0)
         assert alloc_at(new, 0.0) >= 4.0  # allocation stepped up immediately
 
-    @given(t=st.floats(0, 300), used=st.floats(0.1, 20))
-    @settings(max_examples=50, deadline=None)
-    def test_retry_keeps_plan_valid(self, t, used):
+    def _check_retry_valid(self, t, used):
         new = ksplus_retry(self._plan(), t, used)
         assert new.starts[0] == 0.0
         assert np.all(np.diff(new.starts) >= 0)
         assert new.is_monotone()
+
+    if HAVE_HYPOTHESIS:
+        @given(t=st.floats(0, 300), used=st.floats(0.1, 20))
+        @settings(max_examples=50, deadline=None)
+        def test_retry_keeps_plan_valid(self, t, used):
+            self._check_retry_valid(t, used)
+    else:
+        def test_retry_keeps_plan_valid(self):
+            for t in np.linspace(0.0, 300.0, 26):
+                for used in (0.1, 3.0, 9.0, 20.0):
+                    self._check_retry_valid(float(t), used)
 
 
 class TestWastage:

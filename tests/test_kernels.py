@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.wastage import wastage_eval_ref
+from repro.core.wastage import oom_probe_ref, wastage_eval_ref
 from repro.kernels import flash_attention, ssd_pallas, wastage_eval
+from repro.kernels.wastage.ops import oom_probe
 from repro.kernels.flash_attention.ref import mha_reference
 from repro.kernels.ssd.ref import ssd_reference
 
@@ -144,3 +145,41 @@ class TestWastageKernel:
                                       dt=1.0, interpret=True))
         ref = wastage_eval_ref(starts, peaks, mems, lengths, 1.0)
         np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)
+
+
+class TestOOMProbeKernel:
+    """Fused first-violation + success/kill wastage (fleet-engine probe)."""
+
+    @pytest.mark.parametrize("B,T,k", [(8, 512, 4), (16, 700, 8), (3, 64, 1)])
+    def test_sweep(self, B, T, k):
+        starts = np.sort(RNG.uniform(0, T * 0.8, (B, k)), axis=1)
+        starts[:, 0] = 0
+        peaks = np.sort(RNG.uniform(1, 6, (B, k)), axis=1)
+        mems = np.abs(RNG.normal(3, 1.5, (B, T)))
+        lengths = RNG.integers(1, T, B)
+        viol, w_succ, w_kill = (np.asarray(x) for x in oom_probe(
+            starts, peaks, mems, lengths, dt=1.0, interpret=True))
+        vr, wsr, wkr = oom_probe_ref(
+            starts.astype(np.float32), peaks.astype(np.float32),
+            mems.astype(np.float32), lengths, 1.0)
+        np.testing.assert_array_equal(viol, vr)
+        np.testing.assert_allclose(w_succ, wsr, rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(w_kill, wkr, rtol=1e-4, atol=1e-2)
+
+    def test_sentinel_padded_slots_inactive(self):
+        """Plan slots with huge sentinel starts must never grab samples."""
+        B, T, k = 4, 128, 4
+        starts = np.sort(RNG.uniform(0, 80, (B, k)), axis=1)
+        starts[:, 0] = 0
+        starts[:, 2:] = 1e30  # padded
+        peaks = np.sort(RNG.uniform(1, 6, (B, k)), axis=1)
+        mems = np.abs(RNG.normal(2, 1, (B, T)))
+        lengths = np.full(B, T)
+        viol, w_succ, w_kill = (np.asarray(x) for x in oom_probe(
+            starts, peaks, mems, lengths, dt=1.0, interpret=True))
+        vr, wsr, wkr = oom_probe_ref(
+            starts.astype(np.float32), peaks.astype(np.float32),
+            mems.astype(np.float32), lengths, 1.0)
+        np.testing.assert_array_equal(viol, vr)
+        np.testing.assert_allclose(w_succ, wsr, rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(w_kill, wkr, rtol=1e-4, atol=1e-2)
