@@ -213,6 +213,100 @@ def bench_fleet_sim(full: bool):
          f"(ks+ vs best baseline)")
 
 
+# --------------------------------------------------------------- cluster_sim
+def bench_cluster_sim(full: bool):
+    """Packed ClusterSim vs the legacy per-job event loop (same workload).
+
+    Replays a seeded 3-node workload through both engines, asserts the
+    admission logs are identical decision for decision, and reports the
+    replay speedup (target >=5x at >=200 jobs) plus the offset-sweep
+    amortization.  Dumps its own rows into BENCH_cluster.json.
+    """
+    import numpy as _np
+
+    from repro.core import AllocationPlan, RetrySpec, ksplus_retry
+    from repro.sched import ClusterSim, Job, Node, OffsetCandidate
+
+    n_jobs = 600 if full else 240
+
+    def build_jobs():
+        rng = _np.random.default_rng(0)
+        jobs = []
+        for j in range(n_jobs):
+            L = int(rng.integers(24, 90))
+            split = int(rng.uniform(0.4, 0.8) * L)
+            lo = float(rng.uniform(1.5, 3.0))
+            hi = float(rng.uniform(5.0, 11.0))
+            mem = _np.concatenate([_np.full(split, lo),
+                                   _np.full(L - split, hi)])
+            mem = mem * (1.0 + 0.02 * _np.sin(_np.arange(L)))
+            scale = 0.9 if rng.uniform() < 0.2 else 1.12
+            plan = AllocationPlan(
+                starts=_np.asarray([0.0, max(split - 2.0, 1.0)]),
+                peaks=_np.asarray([lo * 1.15, hi * scale]))
+            jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
+                            dt=1.0, plan=plan, est_runtime=float(L)))
+        return jobs
+
+    def nodes():
+        return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0)]
+
+    def packed():
+        return ClusterSim(nodes(), engine="packed").run(
+            build_jobs(), RetrySpec("ksplus"))
+
+    def legacy():
+        return ClusterSim(nodes(), engine="legacy").run(
+            build_jobs(), ksplus_retry)
+
+    pres, us_p = _timed(packed, repeat=3)
+    lres, us_l = _timed(legacy, repeat=1, warmup=False)
+
+    assert pres.placements == lres.placements, \
+        "packed ClusterSim diverged from the legacy event loop"
+    assert pres.retries == lres.retries
+    assert pres.unschedulable == lres.unschedulable
+    rel_err = abs(pres.total_wastage_gbs - lres.total_wastage_gbs) \
+        / max(lres.total_wastage_gbs, 1e-9)
+    assert rel_err <= 1e-6, \
+        f"packed wastage diverged from legacy: rel_err={rel_err:.2e}"
+
+    cands = [OffsetCandidate(), OffsetCandidate(peak=0.10),
+             OffsetCandidate(peak=-0.10), OffsetCandidate(start=0.15),
+             OffsetCandidate(peak=0.10, last_peak_bump=0.5)]
+
+    def sweep():
+        return ClusterSim(nodes()).run(build_jobs(), RetrySpec("ksplus"),
+                                       offsets=cands)
+
+    sres, us_sweep = _timed(sweep, repeat=1)
+    best = min(sres, key=lambda r: r.total_wastage_gbs)
+
+    _row("cluster_sim_speedup", us_p,
+         f"{us_l / us_p:.1f}x vs legacy (target >=5x, {n_jobs} jobs)")
+    _row("cluster_sim_legacy_us", us_l,
+         f"{lres.retries} retries, makespan {lres.makespan:.0f}s")
+    _row("cluster_sim_wastage_rel_err", 0.0,
+         f"{rel_err:.2e} (target <=1e-6)")
+    _row("cluster_sim_offset_sweep_us", us_sweep,
+         f"{len(cands)} candidates, {us_sweep / us_p:.1f}x one run; "
+         f"best offset (peak={best.offset.peak:+.2f}, "
+         f"start={best.offset.start:+.2f}) "
+         f"{best.total_wastage_gbs:.0f} GBs vs base "
+         f"{sres[0].total_wastage_gbs:.0f}")
+    with open("BENCH_cluster.json", "w") as f:
+        json.dump({
+            "cluster_sim_jobs": n_jobs,
+            "cluster_sim_speedup_x": us_l / us_p,
+            "cluster_sim_packed_us": us_p,
+            "cluster_sim_legacy_us": us_l,
+            "cluster_sim_wastage_rel_err": rel_err,
+            "cluster_sim_offset_sweep_us": us_sweep,
+            "cluster_sim_offset_candidates": len(cands),
+            "cluster_sim_placements_match": True,
+        }, f, indent=1)
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(full: bool):
     """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
@@ -297,6 +391,7 @@ BENCHES = {
     "fig7": bench_fig7_segments,
     "fig8": bench_fig8_per_task,
     "fleet_sim": bench_fleet_sim,
+    "cluster_sim": bench_cluster_sim,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }

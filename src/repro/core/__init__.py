@@ -16,7 +16,24 @@ from repro.core.allocation import (
     alloc_series,
     first_violation,
 )
-from repro.core.baselines import DefaultMethod, KSegments, PPMImproved, TovarPPM
+from repro.core.baselines import (
+    DefaultMethod,
+    KSegments,
+    PPMImproved,
+    TovarPPM,
+    WittPercentile,
+)
+from repro.core.envelope import (
+    PackedEnvelopes,
+    alloc_at_packed,
+    first_violation_packed,
+    fits_under,
+    residual_over,
+    retry_packed,
+    segment_sample_bounds,
+    span_alloc_sum,
+    usage_over,
+)
 from repro.core.fleet import (
     FleetBatch,
     FleetResult,
@@ -60,7 +77,10 @@ from repro.core.wastage import (
 
 __all__ = [
     "AllocationPlan", "alloc_at", "alloc_series", "first_violation",
-    "DefaultMethod", "KSegments", "PPMImproved", "TovarPPM",
+    "DefaultMethod", "KSegments", "PPMImproved", "TovarPPM", "WittPercentile",
+    "PackedEnvelopes", "alloc_at_packed", "first_violation_packed",
+    "fits_under", "residual_over", "retry_packed", "segment_sample_bounds",
+    "span_alloc_sum", "usage_over",
     "FleetBatch", "FleetResult", "PackedTraces", "RetrySpec", "TraceBucket",
     "bucket_traces", "concat_packed", "first_attempt", "fleet_eval",
     "pack_plans", "pack_traces", "packed_predict", "simulate_fleet",

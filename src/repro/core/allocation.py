@@ -6,6 +6,10 @@ Every prediction method in this framework (KS+ and all baselines) emits an
 until the job completes.  The cluster simulator and the wastage metric are
 therefore method-agnostic.
 
+The arithmetic itself lives in :mod:`repro.core.envelope` in packed
+``(B, K)`` form; the helpers here are the 1-lane views, kept for per-plan
+callers (oracles, examples, small scripts).
+
 Times are seconds, memory is GB throughout ``repro.core``.
 """
 
@@ -15,6 +19,8 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from repro.core.envelope import alloc_at_packed, first_violation_packed
 
 __all__ = ["AllocationPlan", "alloc_at", "alloc_series", "first_violation"]
 
@@ -60,11 +66,12 @@ class AllocationPlan:
 
 
 def alloc_at(plan: AllocationPlan, t: np.ndarray | float) -> np.ndarray:
-    """Evaluate the plan at time(s) ``t`` (vectorized)."""
-    idx = np.searchsorted(plan.starts, np.asarray(t, dtype=np.float64),
-                          side="right") - 1
-    idx = np.clip(idx, 0, plan.n - 1)
-    return plan.peaks[idx]
+    """Evaluate the plan at time(s) ``t`` — 1-lane view of
+    :func:`repro.core.envelope.alloc_at_packed`."""
+    t_arr = np.asarray(t, dtype=np.float64)
+    out = alloc_at_packed(plan.starts[None, :], plan.peaks[None, :],
+                          t_arr.reshape(1, -1))
+    return out.reshape(t_arr.shape)
 
 
 def alloc_series(plan: AllocationPlan, num_samples: int, dt: float) -> np.ndarray:
@@ -77,8 +84,10 @@ def first_violation(plan: AllocationPlan, mem: np.ndarray, dt: float) -> int:
     """First sample index where usage exceeds the allocation, or -1.
 
     This is the simulator's OOM-killer: the job is terminated during the
-    first sample whose memory demand is above the active limit.
+    first sample whose memory demand is above the active limit.  1-lane view
+    of :func:`repro.core.envelope.first_violation_packed`.
     """
-    alloc = alloc_series(plan, len(mem), dt)
-    bad = np.nonzero(np.asarray(mem, dtype=np.float64) > alloc + 1e-12)[0]
-    return int(bad[0]) if bad.size else -1
+    mem = np.asarray(mem, dtype=np.float64)
+    return int(first_violation_packed(
+        plan.starts[None, :], plan.peaks[None, :], mem[None, :],
+        np.asarray([len(mem)]), dt)[0])

@@ -5,6 +5,8 @@
 * :class:`PPMImproved` — same first allocation, but doubling on failure.
 * :class:`KSegments` — the original k-Segments method (equal-length segments
   over a predicted runtime) with the 'Selective' / 'Partial' retry variants.
+* :class:`WittPercentile` — Witt et al. percentile-of-peaks sizing with
+  doubling on failure (the feedback-loop baseline family).
 * :class:`DefaultMethod` — the workflow developers' static limits with the
   standard retry-with-doubled-memory behaviour.
 
@@ -29,7 +31,8 @@ from repro.core.retry import (
     max_machine_retry,
 )
 
-__all__ = ["TovarPPM", "PPMImproved", "KSegments", "DefaultMethod"]
+__all__ = ["TovarPPM", "PPMImproved", "KSegments", "WittPercentile",
+           "DefaultMethod"]
 
 
 def _constant_plan(value: float) -> AllocationPlan:
@@ -166,6 +169,46 @@ class KSegments:
     @property
     def retry_spec(self) -> RetrySpec:
         return RetrySpec(f"kseg-{self.variant}", margin=self.peak_offset)
+
+
+@dataclasses.dataclass
+class WittPercentile:
+    """Witt et al. percentile predictors: size the first allocation at the
+    q-th percentile of the observed peak distribution and double on failure.
+
+    The classic feedback-loop baseline family ("Feedback-based resource
+    allocation for workflow applications"): no time structure, just a
+    quantile of history — deliberately over-allocating for the top
+    ``100 - percentile`` percent of executions instead of modelling when
+    memory is needed.  One :class:`RetrySpec` + ``predict_packed`` pair, so
+    the fleet engine and the packed cluster scheduler run it unchanged.
+    """
+
+    percentile: float = 95.0
+    machine_memory: float = 128.0
+    _first_alloc: float = dataclasses.field(default=0.0, repr=False)
+
+    @property
+    def name(self) -> str:
+        return f"witt-p{int(round(self.percentile))}"
+
+    def fit(self, mems: Sequence[np.ndarray], dts, inputs) -> None:
+        peaks = np.asarray([float(np.max(m)) for m in mems])
+        self._first_alloc = float(np.percentile(peaks, self.percentile))
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        return _constant_plan(self._first_alloc)
+
+    def predict_packed(self, inputs: np.ndarray):
+        B = len(inputs)
+        return np.zeros((B, 1)), np.full((B, 1), self._first_alloc)
+
+    def retry(self, plan, t_fail, used) -> AllocationPlan:
+        return double_retry(plan, t_fail, used, cap=self.machine_memory)
+
+    @property
+    def retry_spec(self) -> RetrySpec:
+        return RetrySpec("double")
 
 
 @dataclasses.dataclass

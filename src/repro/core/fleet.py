@@ -29,13 +29,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, NamedTuple, Sequence, Union
+from typing import List, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import envelope as _env
 from repro.core.allocation import AllocationPlan
+from repro.core.envelope import PackedEnvelopes, RetrySpec
 
 __all__ = [
     "RetrySpec",
@@ -54,28 +56,10 @@ __all__ = [
     "simulate_fleet_many",
 ]
 
-# Sentinel start for padded plan slots: far beyond any sample time, so the
-# slot's interval is empty and the last real segment's peak is held forever.
-PAD_START = np.float32(1e30)
-
-
-class RetrySpec(NamedTuple):
-    """Static description of a method's failure-handling rule.
-
-    kind:
-      * ``"ksplus"``         — §II-C re-time, or bump the last peak,
-      * ``"kseg-selective"`` — raise only the failed segment's peak,
-      * ``"kseg-partial"``   — raise the failed segment and every later one,
-      * ``"double"``         — double every peak (capped at machine memory),
-      * ``"max-machine"``    — allocate the whole machine,
-      * ``"none"``           — keep the plan (retry changes nothing).
-
-    Hashable on purpose: it is a static argument of the jitted engine.
-    """
-
-    kind: str
-    bump: float = 0.20    # ksplus last-segment peak bump
-    margin: float = 0.10  # k-segments offset margin
+# Sentinel start for padded plan slots (float32 view of the shared
+# envelope-layer sentinel): far beyond any sample time, so the slot's
+# interval is empty and the last real segment's peak is held forever.
+PAD_START = np.float32(_env.PAD_START)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,18 +135,9 @@ def pack_plans(plans: Sequence[AllocationPlan], k: int | None = None):
         starts = np.stack([p.starts for p in plans]).astype(np.float32)
         peaks = np.stack([p.peaks for p in plans]).astype(np.float32)
         return starts, peaks, np.full((B,), K, np.int32)
-    starts = np.full((B, K), PAD_START, np.float32)
-    peaks = np.zeros((B, K), np.float32)
-    nseg = np.zeros((B,), np.int32)
-    for i, p in enumerate(plans):
-        n = p.n
-        if n > K:
-            raise ValueError(f"plan {i} has {n} segments > K={K}")
-        starts[i, :n] = p.starts
-        peaks[i, :n] = p.peaks
-        peaks[i, n:] = p.peaks[-1]
-        nseg[i] = n
-    return starts, peaks, nseg
+    env = PackedEnvelopes.from_plans(plans, K)
+    return (env.starts.astype(np.float32), env.peaks.astype(np.float32),
+            env.nseg.astype(np.int32))
 
 
 def packed_predict(method, inputs: Sequence[float], k: int | None = None):

@@ -15,6 +15,7 @@ harness treat them uniformly.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Protocol, Sequence
 
 import numpy as np
@@ -31,6 +32,21 @@ from repro.core.predictor import (
 from repro.core.retry import ksplus_retry
 
 __all__ = ["MemoryPredictor", "KSPlus", "KSPlusAuto"]
+
+
+def _resample_trace(mem: np.ndarray, dt: float, dt0: float) -> np.ndarray:
+    """Sample-and-hold resampling of a trace from period ``dt`` to ``dt0``.
+
+    Sample ``i`` of the result reads the source sample active at
+    ``i * dt0`` — exact for the step-function envelopes this system
+    models; total duration is preserved to within one target sample.
+    """
+    if dt == dt0:
+        return mem
+    n_new = max(int(np.ceil(len(mem) * dt / dt0 - 1e-9)), 1)
+    idx = np.minimum((np.arange(n_new) * dt0 / dt).astype(np.int64),
+                     len(mem) - 1)
+    return np.asarray(mem)[idx]
 
 
 class MemoryPredictor(Protocol):
@@ -117,8 +133,22 @@ class KSPlusAuto:
     The replay runs on the batched fleet engine with the candidate axis
     folded into the lane batch — one XLA program evaluates every
     ``(candidate k, training execution)`` pair at once instead of |K|
-    serial Python replays.  Set ``engine="oracle"`` to fall back to the
-    per-execution loop (heterogeneous ``dt`` values also fall back).
+    serial Python replays.  Set ``engine="oracle"`` to force the
+    per-execution loop.
+
+    The fleet engine's lane batch shares one sampling period, so
+    heterogeneous per-execution ``dt`` values need a policy
+    (``hetero_dt``, only consulted when ``engine="fleet"`` and the ``dts``
+    actually differ — a warning is emitted either way):
+
+    * ``"resample"`` (default) — sample-and-hold every training trace onto
+      the finest observed ``dt`` and select k on the batched engine.  The
+      envelope is a step function, so resampling preserves its shape; only
+      OOM *timing* inside one coarse sample can shift, which perturbs the
+      candidates' training-wastage totals equally and leaves the argmin
+      (the chosen k) stable in practice.
+    * ``"oracle"`` — replay each execution at its native ``dt`` through the
+      per-execution Python loop (exact, |candidates|× slower).
     """
 
     candidates: Sequence[int] = (2, 3, 4, 6, 8)
@@ -127,11 +157,16 @@ class KSPlusAuto:
     last_peak_bump: float = 0.20
     machine_memory: float = 128.0
     engine: str = "fleet"
+    hetero_dt: str = "resample"
     name: str = "ks+auto"
     chosen_k: Optional[int] = None
     _model: Optional[KSPlus] = dataclasses.field(default=None, repr=False)
 
     def fit(self, mems, dts, inputs) -> None:
+        if self.hetero_dt not in ("resample", "oracle"):
+            raise ValueError(
+                f"unknown hetero_dt policy: {self.hetero_dt!r} "
+                "(expected 'resample' or 'oracle')")
         models = []
         for k in self.candidates:
             m = KSPlus(k=k, peak_offset=self.peak_offset,
@@ -141,9 +176,28 @@ class KSPlusAuto:
             models.append(m)
 
         uniform_dt = len(set(float(d) for d in dts)) == 1
-        if self.engine == "fleet" and uniform_dt:
+        if self.engine != "fleet":
+            totals = self._training_wastage_oracle(models, mems, dts, inputs)
+        elif uniform_dt:
             totals = self._training_wastage_fleet(models, mems, dts, inputs)
-        else:
+        elif self.hetero_dt == "resample":
+            dt0 = float(min(float(d) for d in dts))
+            warnings.warn(
+                "KSPlusAuto.fit: executions have heterogeneous dt values; "
+                f"resampling training traces to the finest dt ({dt0}) for "
+                "the batched k-selection replay (hetero_dt='resample'; use "
+                "hetero_dt='oracle' for exact native-dt replays)",
+                UserWarning, stacklevel=2)
+            resampled = [_resample_trace(m_, float(d), dt0)
+                         for m_, d in zip(mems, dts)]
+            totals = self._training_wastage_fleet(
+                models, resampled, [dt0] * len(mems), inputs)
+        else:  # hetero_dt == "oracle" (validated above)
+            warnings.warn(
+                "KSPlusAuto.fit: executions have heterogeneous dt values; "
+                "falling back to the per-execution oracle replay "
+                "(hetero_dt='oracle')",
+                UserWarning, stacklevel=2)
             totals = self._training_wastage_oracle(models, mems, dts, inputs)
 
         best = (np.inf, None, None)

@@ -7,6 +7,10 @@ KS+ retry: memory peaks are usually right, the *timing* is wrong — so on OOM
 before the last segment, re-time: scale every succeeding segment start so the
 next one begins exactly at the failure time.  Only when the failure is
 already inside the last segment is its peak raised (+20 %).
+
+Each function here is the 1-lane view of the packed, vectorized rule in
+:func:`repro.core.envelope.retry_packed` — there is exactly one float64
+implementation of every rule, shared with the batched scheduler.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.allocation import AllocationPlan
+from repro.core.envelope import RetrySpec, retry_packed
 
 __all__ = [
     "ksplus_retry",
@@ -21,62 +26,51 @@ __all__ = [
     "ksegments_partial_retry",
     "double_retry",
     "max_machine_retry",
+    "apply_retry_spec",
 ]
+
+
+def apply_retry_spec(spec: RetrySpec, plan: AllocationPlan, t_fail: float,
+                     used: float,
+                     machine_memory: float = np.inf) -> AllocationPlan:
+    """Apply a static :class:`RetrySpec` to one plan (1-lane packed view)."""
+    starts, peaks = retry_packed(
+        spec, plan.starts[None, :], plan.peaks[None, :],
+        np.asarray([plan.n]), np.asarray([t_fail]), np.asarray([used]),
+        machine_memory=machine_memory)
+    return plan.with_(starts=starts[0], peaks=peaks[0])
 
 
 def ksplus_retry(plan: AllocationPlan, t_fail: float, used: float,
                  *, last_peak_bump: float = 0.20) -> AllocationPlan:
     """KS+ §II-C: re-time succeeding segments, or bump the last peak."""
-    j = plan.segment_at(t_fail)
-    if j < plan.n - 1:
-        nxt = plan.starts[j + 1]
-        factor = t_fail / nxt if nxt > 0 else 0.0
-        starts = plan.starts.copy()
-        starts[j + 1:] = starts[j + 1:] * factor
-        # The rule is "the next segment begins exactly at the failure time";
-        # nxt * (t_fail / nxt) can round one ulp *above* t_fail, which would
-        # leave the killed sample uncovered and re-fail it, so assign exactly.
-        starts[j + 1] = t_fail
-        # Re-timing keeps ordering (scaling by a common factor) and keeps
-        # starts[0] == 0; clip for numeric safety.
-        starts = np.maximum.accumulate(np.maximum(starts, 0.0))
-        starts[0] = 0.0
-        return plan.with_(starts=starts)
-    peaks = plan.peaks.copy()
-    peaks[-1] = peaks[-1] * (1.0 + last_peak_bump)
-    return plan.with_(peaks=np.maximum.accumulate(peaks))
-
-
-def _offset_target(used: float, margin: float) -> float:
-    return used * (1.0 + margin)
+    return apply_retry_spec(RetrySpec("ksplus", bump=last_peak_bump),
+                            plan, t_fail, used)
 
 
 def ksegments_selective_retry(plan: AllocationPlan, t_fail: float, used: float,
                               *, margin: float = 0.10) -> AllocationPlan:
     """k-Segments 'Selective': raise only the failed segment's peak."""
-    j = plan.segment_at(t_fail)
-    peaks = plan.peaks.copy()
-    peaks[j] = max(peaks[j] * (1.0 + margin), _offset_target(used, margin))
-    return plan.with_(peaks=peaks)
+    return apply_retry_spec(RetrySpec("kseg-selective", margin=margin),
+                            plan, t_fail, used)
 
 
 def ksegments_partial_retry(plan: AllocationPlan, t_fail: float, used: float,
                             *, margin: float = 0.10) -> AllocationPlan:
     """k-Segments 'Partial': raise the failed segment and every later one."""
-    j = plan.segment_at(t_fail)
-    peaks = plan.peaks.copy()
-    target = max(peaks[j] * (1.0 + margin), _offset_target(used, margin))
-    peaks[j:] = np.maximum(peaks[j:], target)
-    return plan.with_(peaks=peaks)
+    return apply_retry_spec(RetrySpec("kseg-partial", margin=margin),
+                            plan, t_fail, used)
 
 
 def double_retry(plan: AllocationPlan, t_fail: float, used: float,
                  *, cap: float = np.inf) -> AllocationPlan:
     """PPM-Improved / nf-core default: double the allocation (capped)."""
-    return plan.with_(peaks=np.minimum(plan.peaks * 2.0, cap))
+    return apply_retry_spec(RetrySpec("double"), plan, t_fail, used,
+                            machine_memory=cap)
 
 
 def max_machine_retry(plan: AllocationPlan, t_fail: float, used: float,
                       *, machine_memory: float) -> AllocationPlan:
     """Tovar-PPM: on failure, allocate the whole machine."""
-    return plan.with_(peaks=np.full_like(plan.peaks, machine_memory))
+    return apply_retry_spec(RetrySpec("max-machine"), plan, t_fail, used,
+                            machine_memory=machine_memory)

@@ -1,6 +1,12 @@
 """Scheduler layer: trace-driven evaluation, cluster sim, monitoring, elastic."""
 
-from repro.sched.cluster import ClusterResult, ClusterSim, Job, Node
+from repro.sched.cluster import (
+    ClusterResult,
+    ClusterSim,
+    Job,
+    Node,
+    OffsetCandidate,
+)
 from repro.sched.elastic import ElasticPlanner, plan_mesh
 from repro.sched.monitor import HBMFootprintModel, MemoryMonitor, read_rss_gb
 from repro.sched.simulator import (
@@ -12,7 +18,7 @@ from repro.sched.simulator import (
 )
 
 __all__ = [
-    "ClusterResult", "ClusterSim", "Job", "Node",
+    "ClusterResult", "ClusterSim", "Job", "Node", "OffsetCandidate",
     "ElasticPlanner", "plan_mesh",
     "HBMFootprintModel", "MemoryMonitor", "read_rss_gb",
     "ExperimentResult", "MethodResult", "default_methods",

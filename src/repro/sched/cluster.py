@@ -1,4 +1,4 @@
-"""Event-driven cluster simulator with time-varying memory allocations.
+"""Batched discrete-event cluster simulator with packed memory envelopes.
 
 This is the paper's deployment context: a resource manager packs workflow
 tasks onto nodes using each task's *memory envelope over time*.  KS+'s
@@ -9,6 +9,34 @@ The simulator is discrete-event: nodes admit a queued job when the job's
 allocation envelope fits under the node's *residual envelope* for the whole
 projected runtime; the OOM killer fires when a job's hidden trace exceeds
 its own allocation, triggering the method's retry strategy.
+
+Two engines share the event semantics:
+
+* ``engine="packed"`` (default) — all job plans live in one packed
+  ``(B, K)`` envelope batch (:mod:`repro.core.envelope`); the admission
+  check is a single vectorized fits-under-residual reduction across every
+  queued job per node, OOM times come from one batched
+  :func:`repro.core.fleet.first_attempt` probe over the whole workload
+  (device-resident traces), wastage is O(K) span arithmetic, and retry
+  re-plans flow through :class:`RetrySpec` / :func:`retry_packed`.
+* ``engine="legacy"`` — the original per-job Python event loop, kept as the
+  decision-for-decision oracle the packed engine is differentially tested
+  against (``tests/test_cluster_packed.py``) and benchmarked against
+  (``benchmarks/run.py --only cluster_sim``).
+
+Precision contract: the packed engine's attempt-#1 OOM probe runs on the
+device in float32 (that is what makes it one dispatch over the whole
+workload); post-retry probes, admission residuals and wastage stay in
+float64.  The two engines therefore agree bitwise whenever trace-vs-plan
+margins exceed float32 resolution (~1e-7 relative) — true for the
+differential workloads and for any real monitoring data, but a trace that
+grazes its allocation within one float32 ulp may OOM under one engine and
+not the other.
+
+``run(offsets=[...])`` sweeps peak/start safety offsets and
+``last_peak_bump`` the way :class:`KSPlusAuto` sweeps k: plans are re-packed
+per candidate (cheap) while the trace batch stays device-resident and the
+per-candidate OOM probes hit the same jitted program.
 """
 
 from __future__ import annotations
@@ -16,13 +44,30 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import AllocationPlan, alloc_at, first_violation
+from repro.core.envelope import (
+    PAD_START,
+    PackedEnvelopes,
+    RetrySpec,
+    alloc_at_packed,
+    first_violation_packed,
+    fits_under,
+    residual_over,
+    retry_packed,
+    segment_sample_bounds,
+    span_alloc_sum,
+)
+from repro.core.retry import apply_retry_spec
 
-__all__ = ["Job", "Node", "ClusterSim", "ClusterResult"]
+__all__ = ["Job", "Node", "ClusterSim", "ClusterResult", "OffsetCandidate"]
+
+ADMIT_GRID = 64  # samples on the admission horizon (both engines)
+
+RetryFn = Callable[[AllocationPlan, float, float], AllocationPlan]
 
 
 @dataclasses.dataclass
@@ -58,10 +103,26 @@ class Node:
         return self.capacity_gb - used
 
     def fits(self, job: Job, t_abs: float) -> bool:
-        horizon = t_abs + np.linspace(0, job.est_runtime, 64)
+        horizon = t_abs + np.linspace(0, job.est_runtime, ADMIT_GRID)
         resid = self.residual_at(t_abs, horizon)
-        need = alloc_at(job.plan, np.linspace(0, job.est_runtime, 64))
+        need = alloc_at(job.plan, np.linspace(0, job.est_runtime, ADMIT_GRID))
         return bool(np.all(need <= resid + 1e-9))
+
+
+@dataclasses.dataclass(frozen=True)
+class OffsetCandidate:
+    """One (peak, start, last_peak_bump) safety-offset assignment.
+
+    Applied *on top of* the offsets the plans already carry: segment peaks
+    are scaled by ``1 + peak``, starts by ``1 - start`` (then re-pinned and
+    made monotone, exactly like the predictor's own offsets), and ksplus
+    retries use ``last_peak_bump`` when given.  ``OffsetCandidate()`` is the
+    identity — it reproduces the un-swept run decision for decision.
+    """
+
+    peak: float = 0.0
+    start: float = 0.0
+    last_peak_bump: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -71,24 +132,79 @@ class ClusterResult:
     retries: int
     unschedulable: int
     avg_utilization: float
+    # Admission log: (t, nid, jid) per placement, in decision order.  The
+    # differential test and the cluster_sim benchmark compare these bitwise.
+    placements: Optional[List[Tuple[float, int, int]]] = None
+    offset: Optional[OffsetCandidate] = None
+
+
+def _as_spec(retry) -> Tuple[Optional[RetrySpec], Optional[RetryFn]]:
+    """Normalize a retry argument into (spec, callable) — exactly one set."""
+    if isinstance(retry, RetrySpec):
+        return retry, None
+    if isinstance(retry, str):
+        return RetrySpec(retry), None
+    return None, retry
 
 
 class ClusterSim:
-    """Packs jobs (method-agnostic) and replays hidden traces with OOM."""
+    """Packs jobs (method-agnostic) and replays hidden traces with OOM.
 
-    def __init__(self, nodes: List[Node], max_attempts: int = 20):
+    ``retry`` (in :meth:`run`) is either a static :class:`RetrySpec` —
+    the vectorized path, required for offset sweeps of ``last_peak_bump`` —
+    or a legacy ``(plan, t_fail, used) -> plan`` callable.
+    """
+
+    def __init__(self, nodes: List[Node], max_attempts: int = 20,
+                 engine: str = "packed"):
+        if engine not in ("packed", "legacy"):
+            raise ValueError(f"unknown engine: {engine!r}")
         self.nodes = nodes
         self.max_attempts = max_attempts
+        self.engine = engine
 
-    def run(self, jobs: List[Job], retry_fn) -> ClusterResult:
+    # ------------------------------------------------------------------ API
+    def run(self, jobs: List[Job], retry,
+            offsets: Optional[Sequence[OffsetCandidate]] = None
+            ) -> Union[ClusterResult, List[ClusterResult]]:
+        """Replay ``jobs`` through the cluster; see the module docstring.
+
+        Without ``offsets`` returns one :class:`ClusterResult` and mutates
+        the ``Job`` objects (attempts / wasted_gbs / plan) like the legacy
+        loop always did.  With ``offsets`` returns one result per
+        :class:`OffsetCandidate` — jobs are *not* mutated; each candidate
+        replays the same workload with re-packed plans while the trace
+        batch (and its device copy) is shared across the sweep.
+        """
+        if self.engine == "legacy":
+            if offsets is not None:
+                raise ValueError("offset sweeps require engine='packed'")
+            return self._run_legacy(jobs, retry)
+        if offsets is None:
+            return self._run_packed(jobs, retry, None, None, write_back=True)
+        shared = self._pack_shared(jobs)
+        return [self._run_packed(jobs, retry, cand, shared, write_back=False)
+                for cand in offsets]
+
+    # ---------------------------------------------------------- legacy loop
+    def _run_legacy(self, jobs: List[Job], retry) -> ClusterResult:
+        spec, retry_fn = _as_spec(retry)
+        if retry_fn is None:
+            # RetrySpec rules that reference "the machine" (max-machine,
+            # double's cap) are bounded by the largest node in this cluster.
+            cap_max = max(n.capacity_gb for n in self.nodes)
+
+            def retry_fn(plan, t_fail, used, _spec=spec, _cap=cap_max):
+                return apply_retry_spec(_spec, plan, t_fail, used,
+                                        machine_memory=_cap)
         queue: List[Job] = list(jobs)
-        events: List[Tuple[float, int, str, int, Job]] = []  # (t, seq, kind, nid, job)
+        events: List[Tuple[float, int, str, int, Job]] = []
         seq = itertools.count()
-        t = 0.0
         retries = 0
         unschedulable = 0
         area_used = 0.0
         done_at = 0.0
+        placements: List[Tuple[float, int, int]] = []
 
         def try_admit(now: float):
             admitted = True
@@ -99,6 +215,7 @@ class ClusterSim:
                         if node.fits(job, now):
                             queue.remove(job)
                             node.running.append((now, job))
+                            placements.append((now, node.nid, job.jid))
                             v = first_violation(job.plan, job.mem, job.dt)
                             if v < 0:
                                 end = now + job.runtime
@@ -149,4 +266,239 @@ class ClusterSim:
             retries=retries,
             unschedulable=unschedulable,
             avg_utilization=area_used / total_cap_area,
+            placements=placements,
+        )
+
+    # ---------------------------------------------------------- packed loop
+    def _pack_shared(self, jobs: List[Job]):
+        """Per-dt trace groups, uploaded to the device once per workload.
+
+        Every offset candidate's attempt-#1 probe reuses these arrays — the
+        (B, T) trace batch is by far the largest operand, so keeping it
+        resident is what makes the sweep cheap.
+        """
+        import jax.numpy as jnp
+
+        from repro.core.fleet import pack_traces
+
+        by_dt: Dict[float, List[int]] = {}
+        for i, job in enumerate(jobs):
+            by_dt.setdefault(float(job.dt), []).append(i)
+        groups = []
+        for dtv in sorted(by_dt):
+            idxs = np.asarray(by_dt[dtv], np.int64)
+            pt = pack_traces([jobs[i].mem for i in idxs])
+            groups.append((dtv, idxs, jnp.asarray(pt.mems),
+                           jnp.asarray(pt.lengths)))
+        return groups
+
+    def _initial_viol(self, starts, peaks, groups, B: int) -> np.ndarray:
+        """Attempt-#1 OOM probe for every lane: one jitted dispatch per dt
+        group (:func:`repro.core.fleet.first_attempt`)."""
+        import jax.numpy as jnp
+
+        from repro.core.fleet import first_attempt
+
+        viol = np.empty((B,), np.int64)
+        for dtv, idxs, dmems, dlengths in groups:
+            v, _ = first_attempt(
+                jnp.asarray(starts[idxs].astype(np.float32)),
+                jnp.asarray(peaks[idxs].astype(np.float32)),
+                dmems, dlengths, jnp.float32(np.inf), dt=dtv)
+            viol[idxs] = np.asarray(v, np.int64)
+        return viol
+
+    @staticmethod
+    def _apply_offset(env: PackedEnvelopes, cand: OffsetCandidate):
+        """Re-pack the plan batch under one offset candidate (cheap: O(BK)).
+
+        Elementwise scaling only — the plans' own shape (including the
+        non-monotone envelopes k-Segments emits) is preserved, so the
+        identity candidate reproduces the base plans exactly.
+        """
+        real = np.arange(env.K)[None, :] < env.nseg[:, None]
+        st = np.where(real, env.starts * (1.0 - cand.start), PAD_START)
+        st = np.maximum.accumulate(np.maximum(st, 0.0), axis=1)
+        st[:, 0] = 0.0
+        st = np.where(real, st, PAD_START)
+        pk = np.maximum(env.peaks * (1.0 + cand.peak), 1e-6)
+        return st, pk
+
+    def _run_packed(self, jobs: List[Job], retry,
+                    offset: Optional[OffsetCandidate], shared,
+                    write_back: bool) -> ClusterResult:
+        if not jobs:
+            return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
+                                 offset=offset)
+        if any(node.running for node in self.nodes):
+            # Resident jobs live outside the packed batch; admitting around
+            # them silently would diverge from the legacy loop.
+            raise ValueError(
+                "engine='packed' requires empty Node.running; submit "
+                "resident jobs as part of `jobs` or use engine='legacy'")
+        spec, retry_fn = _as_spec(retry)
+        if offset is not None and offset.last_peak_bump is not None:
+            if spec is None:
+                raise ValueError(
+                    "sweeping last_peak_bump requires a RetrySpec retry")
+            spec = spec._replace(bump=offset.last_peak_bump)
+
+        B = len(jobs)
+        env = PackedEnvelopes.from_plans([j.plan for j in jobs])
+        if offset is None:
+            starts, peaks = env.starts.copy(), env.peaks.copy()
+        else:
+            starts, peaks = self._apply_offset(env, offset)
+        nseg = env.nseg
+        K = starts.shape[1]
+
+        # Per-job static state (float64 host arrays).
+        dts = np.asarray([j.dt for j in jobs], np.float64)
+        lengths = np.asarray([len(j.mem) for j in jobs], np.int64)
+        runtimes = lengths * dts
+        est = np.asarray([j.est_runtime for j in jobs], np.float64)
+        summem = np.asarray(
+            [j.mem.sum(dtype=np.float64) for j in jobs], np.float64)
+        peak_demand = np.asarray(
+            [float(np.max(j.mem)) for j in jobs], np.float64)
+        caps = np.asarray([n.capacity_gb for n in self.nodes], np.float64)
+        cap_max = float(caps.max())
+        # Admission horizon grids (B, G) — the legacy per-job linspace,
+        # evaluated for every job at once.
+        grid_rel = np.linspace(0.0, est, ADMIT_GRID, axis=1)
+        need = alloc_at_packed(starts, peaks, grid_rel)
+        bounds = segment_sample_bounds(starts, dts[:, None])
+
+        # Attempt-#1 OOM probe, one batched dispatch per dt group.
+        shared = shared if shared is not None else self._pack_shared(jobs)
+        viol = self._initial_viol(starts, peaks, shared, B)
+
+        # Mutable replay state.  attempts/wastage continue from the Job
+        # counters, exactly like the legacy loop's in-place accumulation.
+        attempts0 = np.asarray([j.attempts for j in jobs], np.int64)
+        attempts = attempts0.copy()
+        wasted = np.asarray([j.wasted_gbs for j in jobs], np.float64)
+        node_running: List[List[int]] = [[] for _ in self.nodes]
+        admit_t = np.zeros((B,), np.float64)
+        queue: List[int] = list(range(B))
+        events: List[Tuple[float, int, str, int, int]] = []
+        seq = itertools.count()
+        retries = 0
+        unschedulable = 0
+        area_used = 0.0
+        done_at = 0.0
+        placements: List[Tuple[float, int, int]] = []
+
+        def fits_column(ni: int, q: List[int], now: float) -> Dict[int, bool]:
+            """Admission predicate for every queued job vs node ``ni`` at
+            ``now`` — one vectorized residual evaluation + reduction."""
+            run = node_running[ni]
+            grid_abs = now + grid_rel[q]
+            resid = residual_over(
+                caps[ni], starts[run], peaks[run], admit_t[run], grid_abs,
+                dur=runtimes[run])
+            ok = fits_under(need[q], resid)
+            return dict(zip(q, ok.tolist()))
+
+        def try_admit(now: float):
+            cols: Dict[int, Dict[int, bool]] = {}
+            admitted = True
+            while admitted and queue:
+                admitted = False
+                for ji in list(queue):
+                    for ni in range(len(self.nodes)):
+                        col = cols.get(ni)
+                        if col is None or ji not in col:
+                            col = cols[ni] = fits_column(ni, list(queue), now)
+                        if col[ji]:
+                            queue.remove(ji)
+                            node_running[ni].append(ji)
+                            admit_t[ji] = now
+                            cols.pop(ni, None)  # this node's residual changed
+                            placements.append(
+                                (float(now), self.nodes[ni].nid,
+                                 jobs[ji].jid))
+                            v = viol[ji]
+                            if v < 0:
+                                heapq.heappush(
+                                    events, (now + runtimes[ji], next(seq),
+                                             "done", ni, ji))
+                            else:
+                                heapq.heappush(
+                                    events, (now + v * dts[ji], next(seq),
+                                             "oom", ni, ji))
+                            admitted = True
+                            break
+
+        try_admit(0.0)
+        guard = 0
+        while events:
+            guard += 1
+            if guard > 200_000:
+                raise RuntimeError("cluster sim did not converge")
+            t, _, kind, ni, ji = heapq.heappop(events)
+            node_running[ni].remove(ji)
+            row = slice(ji, ji + 1)
+            if kind == "done":
+                w = span_alloc_sum(peaks[row], bounds[row], lengths[row])[0]
+                wasted[ji] += (w - summem[ji]) * dts[ji]
+                area_used += summem[ji] * dts[ji]
+                done_at = max(done_at, t)
+            else:  # OOM kill
+                v = int(viol[ji])
+                w = span_alloc_sum(peaks[row], bounds[row],
+                                   np.asarray([v + 1]))[0]
+                wasted[ji] += w * dts[ji]
+                attempts[ji] += 1
+                retries += 1
+                if attempts[ji] >= self.max_attempts or \
+                        peak_demand[ji] > cap_max:
+                    unschedulable += 1
+                else:
+                    t_fail = v * dts[ji]
+                    used = float(jobs[ji].mem[v])
+                    if spec is not None:
+                        ns, npk = retry_packed(
+                            spec, starts[row], peaks[row], nseg[row],
+                            np.asarray([t_fail]), np.asarray([used]),
+                            machine_memory=cap_max)
+                        starts[ji], peaks[ji] = ns[0], npk[0]
+                    else:
+                        s, p = PackedEnvelopes(
+                            starts, peaks, nseg).row(ji)
+                        new = retry_fn(AllocationPlan(s, p), t_fail, used)
+                        starts[ji, :new.n] = new.starts
+                        starts[ji, new.n:] = PAD_START
+                        peaks[ji, :new.n] = new.peaks
+                        peaks[ji, new.n:] = new.peaks[-1]
+                        nseg[ji] = new.n
+                    # Refresh the lane's derived state (plan changed).
+                    need[ji] = alloc_at_packed(
+                        starts[row], peaks[row], grid_rel[row])[0]
+                    bounds[ji] = segment_sample_bounds(
+                        starts[row], dts[ji])[0]
+                    viol[ji] = first_violation_packed(
+                        starts[row], peaks[row],
+                        np.asarray(jobs[ji].mem, np.float64)[None, :],
+                        lengths[row], float(dts[ji]))[0]
+                    queue.append(ji)
+            try_admit(t)
+
+        if write_back:
+            for i, job in enumerate(jobs):
+                job.attempts = int(attempts[i])
+                job.wasted_gbs = float(wasted[i])
+                if attempts[i] > attempts0[i]:  # plan changed by retries
+                    s, p = PackedEnvelopes(starts, peaks, nseg).row(i)
+                    job.plan = AllocationPlan(starts=s, peaks=p)
+
+        total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
+        return ClusterResult(
+            makespan=done_at,
+            total_wastage_gbs=float(wasted.sum()),
+            retries=retries,
+            unschedulable=unschedulable,
+            avg_utilization=area_used / total_cap_area,
+            placements=placements,
+            offset=offset,
         )

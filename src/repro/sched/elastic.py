@@ -6,9 +6,14 @@ data plane restartable under churn:
 * :func:`plan_mesh` — best (data, model) factorization for a surviving
   device count, honoring divisibility of the model's sharded dims.
 * :class:`ElasticPlanner` — admission control for concurrent jobs using
-  their KS+ memory envelopes (host- or HBM-side): on `node_join` /
-  `node_leave` it recomputes which queued jobs fit *now* and which running
-  jobs must be checkpointed and re-sharded.
+  their KS+ memory envelopes (host- or HBM-side).  It shares the packed
+  admission primitive with :class:`repro.sched.cluster.ClusterSim`: slice
+  residual head-room is one vectorized
+  :func:`repro.core.envelope.usage_over` evaluation over the slice's packed
+  job envelopes, not a per-job Python loop.  ``node_leave`` evicts the
+  victim slice's jobs into a checkpoint/requeue list, ``node_join`` (and
+  :meth:`ElasticPlanner.drain`) re-admits queued jobs through the same
+  packed check.
 
 Together with the deterministic data pipeline (batches are a pure function
 of ``(seed, step, shard)``) and atomic checkpoints, a re-shard is: drain →
@@ -22,7 +27,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import AllocationPlan, alloc_at
+from repro.core import AllocationPlan
+from repro.core.envelope import PackedEnvelopes, usage_over
 
 __all__ = ["plan_mesh", "ElasticPlanner"]
 
@@ -49,25 +55,62 @@ class _Slice:
         default_factory=list)  # (job id, envelope, started_at)
 
     def headroom(self, now: float, horizon_s: float = 600.0) -> float:
+        """Worst-case free memory over the horizon — packed evaluation of
+        every resident envelope at once (shared with the cluster sim)."""
+        if not self.jobs:
+            return float(self.memory_gb)
         grid = now + np.linspace(0, horizon_s, 32)
-        used = np.zeros_like(grid)
-        for _, plan, t0 in self.jobs:
-            used += alloc_at(plan, np.maximum(grid - t0, 0.0))
+        env = PackedEnvelopes.from_plans([p for _, p, _ in self.jobs])
+        t0 = np.asarray([t for _, _, t in self.jobs], np.float64)
+        used = usage_over(env.starts, env.peaks, t0, grid)
         return float(self.memory_gb - used.max())
 
 
 class ElasticPlanner:
+    """Envelope-aware admission control under node churn.
+
+    Jobs that cannot be placed (yet) wait in ``pending`` in submission
+    order; every membership change re-runs the packed admission check over
+    the queue.  ``node_leave`` returns the job ids that must checkpoint —
+    they are simultaneously requeued, so the next ``node_join``/``drain``
+    re-admits them automatically (the re-shard decision is: evicted job →
+    checkpoint → requeue → restore wherever it fits next).
+    """
+
     def __init__(self):
         self.slices: Dict[str, _Slice] = {}
+        self.pending: List[Tuple[str, AllocationPlan]] = []
 
-    def node_join(self, name: str, memory_gb: float):
+    # ------------------------------------------------------------ membership
+    def node_join(self, name: str, memory_gb: float,
+                  now: Optional[float] = None) -> Dict[str, str]:
+        """Add a slice and (with ``now`` given) re-admit queued jobs onto
+        the grown pool.
+
+        ``now`` must be the *current* scheduler time — resident envelopes
+        are evaluated relative to it, so draining at a stale time would
+        overestimate headroom.  Without ``now`` the queue is left for an
+        explicit :meth:`drain`.  Returns ``{job id: slice name}`` for every
+        queued job placed by this join.
+        """
         self.slices[name] = _Slice(name, memory_gb)
+        return self.drain(now) if now is not None else {}
 
-    def node_leave(self, name: str) -> List[str]:
-        """Returns job ids that must be checkpointed and requeued."""
+    def node_leave(self, name: str, now: Optional[float] = None) -> List[str]:
+        """Remove a slice; returns job ids that must be checkpointed.
+
+        The evicted jobs are requeued (ahead of other waiters — they hold
+        checkpoints and were running first); with ``now`` given they are
+        immediately re-admitted wherever they fit on the surviving slices.
+        """
         sl = self.slices.pop(name, None)
-        return [jid for jid, _, _ in (sl.jobs if sl else [])]
+        evicted = [(jid, plan) for jid, plan, _ in (sl.jobs if sl else [])]
+        self.pending = evicted + self.pending
+        if now is not None:
+            self.drain(now)
+        return [jid for jid, _ in evicted]
 
+    # ------------------------------------------------------------- admission
     def admit(self, jid: str, envelope: AllocationPlan, now: float
               ) -> Optional[str]:
         """Place a job on the slice with the most post-placement headroom."""
@@ -81,6 +124,32 @@ class ElasticPlanner:
         best.jobs.append((jid, envelope, now))
         return best.name
 
+    def submit(self, jid: str, envelope: AllocationPlan, now: float
+               ) -> Optional[str]:
+        """Admit now, or queue for the next membership change."""
+        placed = self.admit(jid, envelope, now)
+        if placed is None:
+            self.pending.append((jid, envelope))
+        return placed
+
+    def drain(self, now: float) -> Dict[str, str]:
+        """Re-run admission for every queued job, in queue order."""
+        placed: Dict[str, str] = {}
+        still: List[Tuple[str, AllocationPlan]] = []
+        for jid, envelope in self.pending:
+            name = self.admit(jid, envelope, now)
+            if name is None:
+                still.append((jid, envelope))
+            else:
+                placed[jid] = name
+        self.pending = still
+        return placed
+
+    @property
+    def queued(self) -> List[str]:
+        return [jid for jid, _ in self.pending]
+
     def finish(self, jid: str):
         for sl in self.slices.values():
             sl.jobs = [(j, p, t) for j, p, t in sl.jobs if j != jid]
+        self.pending = [(j, p) for j, p in self.pending if j != jid]

@@ -26,6 +26,7 @@ from repro.core import (
     KSPlusAuto,
     PPMImproved,
     TovarPPM,
+    WittPercentile,
     bucket_traces,
     concat_packed,
     packed_predict,
@@ -62,7 +63,8 @@ class ExperimentResult:
 
 def default_methods(k: int, machine_memory: float,
                     default_limit: float) -> Dict[str, Callable[[], object]]:
-    """The paper's method zoo (§III-B), freshly constructed per family."""
+    """The paper's method zoo (§III-B) plus the Witt et al. percentile
+    baseline, freshly constructed per family."""
     return {
         "ks+": lambda: KSPlus(k=k),
         "ks+auto": lambda: KSPlusAuto(machine_memory=machine_memory),
@@ -70,6 +72,8 @@ def default_methods(k: int, machine_memory: float,
         "k-segments-partial": lambda: KSegments(k=k, variant="partial"),
         "tovar-ppm": lambda: TovarPPM(machine_memory=machine_memory),
         "ppm-improved": lambda: PPMImproved(machine_memory=machine_memory),
+        "witt-p95": lambda: WittPercentile(percentile=95.0,
+                                           machine_memory=machine_memory),
         "default": lambda: DefaultMethod(limit_gb=default_limit,
                                          machine_memory=machine_memory),
     }

@@ -1,0 +1,203 @@
+"""Differential tests: packed ClusterSim vs the legacy per-job event loop.
+
+The packed engine must reproduce the legacy loop's *decisions* bitwise —
+the full admission log (time, node, job), retry and unschedulable counts,
+makespan — and its wastage within 1e-6 relative (span arithmetic vs the
+per-sample float64 sums).  Workloads are seeded multi-node mixes with
+multi-segment plans, deliberate under-allocations (retries) and an
+unsatisfiable job.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationPlan, RetrySpec, ksplus_retry
+from repro.sched import ClusterSim, Job, Node, OffsetCandidate
+
+
+def _workload(n_jobs=48, seed=0, under_frac=0.25, dt=1.0):
+    """Seeded jobs with 2–3-segment plans; ``under_frac`` of them
+    under-allocated in some segment so the OOM/retry path is exercised.
+    Margins are kept ≳1e-3 relative so the float32 device probe and the
+    float64 oracle agree on every violation sample."""
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for j in range(n_jobs):
+        L = int(rng.integers(24, 90))
+        split = int(rng.uniform(0.4, 0.8) * L)
+        lo = float(rng.uniform(1.5, 3.0))
+        hi = float(rng.uniform(5.0, 11.0))
+        mem = np.concatenate([np.full(split, lo), np.full(L - split, hi)])
+        mem = mem * (1.0 + 0.02 * np.sin(np.arange(L)))  # mild structure
+        under = rng.uniform() < under_frac
+        scale = 0.9 if under else 1.12
+        plan = AllocationPlan(
+            starts=np.asarray([0.0, max(split * dt - 2.0, 1.0)]),
+            peaks=np.asarray([lo * 1.15, hi * scale]))
+        jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem, dt=dt,
+                        plan=plan, est_runtime=float(L * dt)))
+    return jobs
+
+
+def _nodes():
+    return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0)]
+
+
+def _run_both(jobs_builder, retry_spec, retry_fn, **sim_kw):
+    legacy = ClusterSim(_nodes(), engine="legacy", **sim_kw).run(
+        jobs_builder(), retry_fn)
+    packed = ClusterSim(_nodes(), engine="packed", **sim_kw).run(
+        jobs_builder(), retry_spec)
+    return legacy, packed
+
+
+def _assert_equivalent(legacy, packed):
+    assert packed.placements == legacy.placements  # bitwise decision log
+    assert packed.retries == legacy.retries
+    assert packed.unschedulable == legacy.unschedulable
+    assert packed.makespan == legacy.makespan
+    np.testing.assert_allclose(packed.total_wastage_gbs,
+                               legacy.total_wastage_gbs, rtol=1e-6)
+    np.testing.assert_allclose(packed.avg_utilization,
+                               legacy.avg_utilization, rtol=1e-6)
+
+
+class TestDifferential:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_ksplus_retry_matches_legacy(self, seed):
+        legacy, packed = _run_both(
+            lambda: _workload(48, seed=seed),
+            RetrySpec("ksplus"), ksplus_retry)
+        assert legacy.retries > 0  # the workload must exercise retries
+        _assert_equivalent(legacy, packed)
+
+    @pytest.mark.parametrize("kind", ["kseg-partial", "double", "max-machine"])
+    def test_other_retry_rules_match(self, kind):
+        spec = RetrySpec(kind)
+        legacy, packed = _run_both(
+            lambda: _workload(32, seed=5), spec, spec)
+        _assert_equivalent(legacy, packed)
+
+    def test_machine_bound_retries_stay_schedulable(self):
+        """RetrySpec rules that reference 'the machine' (max-machine,
+        double's cap) are bounded by the largest node, so a retried job is
+        either re-admitted or counted unschedulable — never silently lost."""
+        jobs = _workload(24, seed=3, under_frac=0.5)
+        res = ClusterSim(_nodes()).run(jobs, RetrySpec("max-machine"))
+        assert res.retries > 0
+        finished = len(res.placements) - res.retries
+        assert finished + res.unschedulable == len(jobs)
+        assert all(j.plan.peaks.max() <= 64.0 for j in jobs)  # largest node
+
+    def test_unsatisfiable_job_matches(self):
+        def build():
+            jobs = _workload(12, seed=7)
+            big = np.full(30, 200.0)  # above every node's capacity
+            jobs.append(Job(jid=99, family="t", input_gb=1.0, mem=big,
+                            dt=1.0,
+                            plan=AllocationPlan(np.zeros(1), np.asarray([8.0])),
+                            est_runtime=30.0))
+            return jobs
+        legacy, packed = _run_both(build, RetrySpec("ksplus"), ksplus_retry)
+        assert legacy.unschedulable >= 1
+        _assert_equivalent(legacy, packed)
+
+    def test_callable_retry_on_packed_engine(self):
+        """The packed engine accepts legacy callables (per-lane repack)."""
+        def bump(plan, t_fail, used):
+            return plan.with_(peaks=np.maximum(plan.peaks * 2.0, used * 1.1))
+        legacy = ClusterSim(_nodes(), engine="legacy").run(
+            _workload(24, seed=9), bump)
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(24, seed=9), bump)
+        _assert_equivalent(legacy, packed)
+
+    def test_write_back_matches_legacy_job_state(self):
+        jobs_l = _workload(24, seed=2)
+        jobs_p = _workload(24, seed=2)
+        ClusterSim(_nodes(), engine="legacy").run(jobs_l, ksplus_retry)
+        ClusterSim(_nodes(), engine="packed").run(jobs_p, RetrySpec("ksplus"))
+        for jl, jp in zip(jobs_l, jobs_p):
+            assert jl.attempts == jp.attempts
+            np.testing.assert_allclose(jp.wasted_gbs, jl.wasted_gbs,
+                                       rtol=1e-6, atol=1e-9)
+            assert np.array_equal(jl.plan.starts, jp.plan.starts)
+            assert np.array_equal(jl.plan.peaks, jp.plan.peaks)
+
+
+class TestOffsetSweep:
+    def test_identity_candidate_reproduces_base_run(self):
+        base = ClusterSim(_nodes()).run(_workload(32, seed=4),
+                                        RetrySpec("ksplus"))
+        swept = ClusterSim(_nodes()).run(
+            _workload(32, seed=4), RetrySpec("ksplus"),
+            offsets=[OffsetCandidate()])
+        assert len(swept) == 1
+        assert swept[0].placements == base.placements
+        assert swept[0].retries == base.retries
+        np.testing.assert_allclose(swept[0].total_wastage_gbs,
+                                   base.total_wastage_gbs, rtol=1e-12)
+
+    def test_identity_preserves_non_monotone_plans(self):
+        """k-Segments can emit envelopes that step *down*; the identity
+        candidate must not flatten them."""
+        def build():
+            jobs = _workload(12, seed=6)
+            for j in jobs[:4]:  # high-then-low plans (still covering mem)
+                j.plan = AllocationPlan(
+                    starts=j.plan.starts,
+                    peaks=np.asarray([float(j.mem.max()) * 1.1,
+                                      float(j.mem[-1]) * 1.3]))
+            return jobs
+        base = ClusterSim(_nodes()).run(build(), RetrySpec("ksplus"))
+        swept = ClusterSim(_nodes()).run(build(), RetrySpec("ksplus"),
+                                         offsets=[OffsetCandidate()])
+        assert swept[0].placements == base.placements
+        np.testing.assert_allclose(swept[0].total_wastage_gbs,
+                                   base.total_wastage_gbs, rtol=1e-12)
+
+    def test_sweep_does_not_mutate_jobs(self):
+        jobs = _workload(16, seed=4)
+        peaks0 = [j.plan.peaks.copy() for j in jobs]
+        ClusterSim(_nodes()).run(jobs, RetrySpec("ksplus"),
+                                 offsets=[OffsetCandidate(peak=0.3),
+                                          OffsetCandidate()])
+        assert all(j.attempts == 0 for j in jobs)
+        assert all(np.array_equal(p, j.plan.peaks)
+                   for p, j in zip(peaks0, jobs))
+
+    def test_offsets_trade_retries_for_wastage(self):
+        """Raising the peak offset eliminates retries (over-allocating);
+        the identity candidate keeps the base run's failures."""
+        res = ClusterSim(_nodes()).run(
+            _workload(40, seed=1, under_frac=0.4), RetrySpec("ksplus"),
+            offsets=[OffsetCandidate(),
+                     OffsetCandidate(peak=0.25),
+                     OffsetCandidate(peak=0.25, last_peak_bump=0.5)])
+        assert [r.offset for r in res] == [
+            OffsetCandidate(), OffsetCandidate(peak=0.25),
+            OffsetCandidate(peak=0.25, last_peak_bump=0.5)]
+        assert res[0].retries > res[1].retries
+        # a bigger envelope can only start jobs later or equally packed
+        assert res[1].total_wastage_gbs > 0
+
+    def test_last_peak_bump_requires_spec(self):
+        with pytest.raises(ValueError):
+            ClusterSim(_nodes()).run(
+                _workload(4, seed=0), ksplus_retry,
+                offsets=[OffsetCandidate(last_peak_bump=0.5)])
+
+    def test_packed_engine_rejects_preseeded_running(self):
+        """Resident jobs live outside the packed batch — refuse loudly
+        instead of silently admitting into occupied memory."""
+        jobs = _workload(4, seed=0)
+        nodes = _nodes()
+        nodes[1].running.append((0.0, jobs[0]))
+        with pytest.raises(ValueError, match="Node.running"):
+            ClusterSim(nodes).run(jobs[1:], RetrySpec("ksplus"))
+
+    def test_legacy_engine_rejects_offsets(self):
+        with pytest.raises(ValueError):
+            ClusterSim(_nodes(), engine="legacy").run(
+                _workload(4, seed=0), ksplus_retry,
+                offsets=[OffsetCandidate()])

@@ -1,0 +1,190 @@
+"""Unit tests for the shared packed-envelope layer (`repro.core.envelope`).
+
+The packed functions are the single implementation of envelope arithmetic;
+these tests pin them against brute-force per-sample / per-plan references
+and against the 1-lane scalar views in `allocation` / `retry`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationPlan,
+    PackedEnvelopes,
+    RetrySpec,
+    alloc_at,
+    alloc_at_packed,
+    first_violation,
+    first_violation_packed,
+    fits_under,
+    residual_over,
+    retry_packed,
+    segment_sample_bounds,
+    span_alloc_sum,
+    usage_over,
+)
+
+
+def _random_plans(rng, B, kmax=6):
+    plans = []
+    for _ in range(B):
+        n = int(rng.integers(1, kmax + 1))
+        starts = np.sort(rng.uniform(0, 80, n))
+        starts[0] = 0.0
+        peaks = np.maximum.accumulate(rng.uniform(1, 16, n))
+        plans.append(AllocationPlan(starts=starts, peaks=peaks))
+    return plans
+
+
+class TestPacking:
+    def test_round_trip(self):
+        rng = np.random.default_rng(0)
+        plans = _random_plans(rng, 17)
+        env = PackedEnvelopes.from_plans(plans)
+        assert env.B == 17 and env.K == max(p.n for p in plans)
+        for i, p in enumerate(plans):
+            s, pk = env.row(i)
+            assert np.array_equal(s, p.starts)
+            assert np.array_equal(pk, p.peaks)
+
+    def test_padded_rows_evaluate_identically(self):
+        rng = np.random.default_rng(1)
+        plans = _random_plans(rng, 9)
+        env = PackedEnvelopes.from_plans(plans, k=10)
+        t = rng.uniform(0, 120, 64)
+        packed = alloc_at_packed(env.starts, env.peaks, t)
+        for i, p in enumerate(plans):
+            np.testing.assert_array_equal(packed[i], alloc_at(p, t))
+
+    def test_too_many_segments_raises(self):
+        p = AllocationPlan(np.asarray([0.0, 1.0]), np.asarray([1.0, 2.0]))
+        with pytest.raises(ValueError):
+            PackedEnvelopes.from_plans([p], k=1)
+
+
+class TestAllocAndViolation:
+    def test_per_lane_time_grids(self):
+        rng = np.random.default_rng(2)
+        plans = _random_plans(rng, 6)
+        env = PackedEnvelopes.from_plans(plans)
+        t = rng.uniform(0, 100, (6, 33))
+        out = alloc_at_packed(env.starts, env.peaks, t)
+        for i, p in enumerate(plans):
+            np.testing.assert_array_equal(out[i], alloc_at(p, t[i]))
+
+    def test_first_violation_matches_scalar(self):
+        rng = np.random.default_rng(3)
+        plans = _random_plans(rng, 24)
+        env = PackedEnvelopes.from_plans(plans)
+        T = 96
+        mems = np.abs(rng.normal(6, 4, (24, T)))
+        lengths = rng.integers(8, T + 1, 24)
+        mems *= np.arange(T)[None, :] < lengths[:, None]
+        viol = first_violation_packed(env.starts, env.peaks, mems,
+                                      lengths, 0.7)
+        for i, p in enumerate(plans):
+            assert viol[i] == first_violation(p, mems[i, :lengths[i]], 0.7)
+
+
+class TestSpanArithmetic:
+    @pytest.mark.parametrize("dt", [1.0, 0.3, 2.5])
+    def test_span_sum_equals_per_sample_sum(self, dt):
+        rng = np.random.default_rng(4)
+        plans = _random_plans(rng, 20)
+        env = PackedEnvelopes.from_plans(plans)
+        T = 128
+        upto = rng.integers(1, T, 20)
+        bounds = segment_sample_bounds(env.starts, dt)
+        spans = span_alloc_sum(env.peaks, bounds, upto)
+        for i, p in enumerate(plans):
+            alloc = alloc_at(p, np.arange(upto[i]) * dt)
+            np.testing.assert_allclose(spans[i], alloc.sum(), rtol=1e-12)
+
+    def test_per_lane_dt(self):
+        rng = np.random.default_rng(5)
+        plans = _random_plans(rng, 8)
+        env = PackedEnvelopes.from_plans(plans)
+        dts = rng.uniform(0.2, 2.0, (8, 1))
+        upto = rng.integers(1, 64, 8)
+        bounds = segment_sample_bounds(env.starts, dts)
+        spans = span_alloc_sum(env.peaks, bounds, upto)
+        for i, p in enumerate(plans):
+            alloc = alloc_at(p, np.arange(upto[i]) * dts[i, 0])
+            np.testing.assert_allclose(spans[i], alloc.sum(), rtol=1e-12)
+
+
+class TestResidual:
+    def test_usage_matches_loop(self):
+        rng = np.random.default_rng(6)
+        plans = _random_plans(rng, 5)
+        env = PackedEnvelopes.from_plans(plans)
+        t0 = rng.uniform(0, 30, 5)
+        dur = rng.uniform(10, 60, 5)
+        t = rng.uniform(0, 120, 40)
+        got = usage_over(env.starts, env.peaks, t0, t, dur)
+        want = np.zeros_like(t)
+        for i, p in enumerate(plans):
+            rel = t - t0[i]
+            active = (rel >= 0) & (rel < dur[i] + 1e-9)
+            want += np.where(active, alloc_at(p, np.maximum(rel, 0.0)), 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_no_window_counts_forever(self):
+        p = AllocationPlan(np.zeros(1), np.asarray([4.0]))
+        env = PackedEnvelopes.from_plans([p])
+        t = np.asarray([0.0, 5.0, 500.0])
+        np.testing.assert_array_equal(
+            usage_over(env.starts, env.peaks, np.zeros(1), t), [4, 4, 4])
+        np.testing.assert_array_equal(
+            usage_over(env.starts, env.peaks, np.zeros(1), t,
+                       dur=np.asarray([10.0])), [4, 4, 0])
+
+    def test_empty_usage_and_fits(self):
+        z = np.zeros((0, 3))
+        t = np.linspace(0, 10, 8)
+        assert usage_over(z, z, np.zeros(0), t).shape == t.shape
+        resid = residual_over(32.0, z, z, np.zeros(0), t)
+        need = np.full((2, 8), 30.0)
+        np.testing.assert_array_equal(fits_under(need, resid), [True, True])
+        np.testing.assert_array_equal(
+            fits_under(need + 3.0, resid), [False, False])
+
+
+class TestRetryPacked:
+    """Batch path vs the 1-lane scalar views (which are pinned bitwise to
+    the seed implementations by the fleet differential tests)."""
+
+    @pytest.mark.parametrize("kind", ["ksplus", "kseg-selective",
+                                      "kseg-partial", "double",
+                                      "max-machine", "none"])
+    def test_batch_matches_single_lane(self, kind):
+        from repro.core.retry import apply_retry_spec
+        rng = np.random.default_rng(7)
+        plans = _random_plans(rng, 30)
+        env = PackedEnvelopes.from_plans(plans)
+        t_fail = rng.uniform(0, 100, 30)
+        used = rng.uniform(1, 30, 30)
+        spec = RetrySpec(kind)
+        st, pk = retry_packed(spec, env.starts, env.peaks, env.nseg,
+                              t_fail, used, machine_memory=64.0)
+        for i, p in enumerate(plans):
+            one = apply_retry_spec(spec, p, float(t_fail[i]), float(used[i]),
+                                   machine_memory=64.0)
+            np.testing.assert_array_equal(st[i, :p.n], one.starts)
+            np.testing.assert_array_equal(pk[i, :p.n], one.peaks)
+
+    def test_unknown_kind_raises(self):
+        env = PackedEnvelopes.from_plans(
+            [AllocationPlan(np.zeros(1), np.ones(1))])
+        with pytest.raises(ValueError):
+            retry_packed(RetrySpec("bogus"), env.starts, env.peaks,
+                         env.nseg, [0.0], [1.0])
+
+    def test_inputs_not_mutated(self):
+        env = PackedEnvelopes.from_plans(
+            _random_plans(np.random.default_rng(8), 4))
+        s0, p0 = env.starts.copy(), env.peaks.copy()
+        retry_packed(RetrySpec("ksplus"), env.starts, env.peaks, env.nseg,
+                     np.full(4, 5.0), np.full(4, 9.0))
+        np.testing.assert_array_equal(env.starts, s0)
+        np.testing.assert_array_equal(env.peaks, p0)

@@ -19,6 +19,7 @@ from repro.core import (
     PPMImproved,
     RetrySpec,
     TovarPPM,
+    WittPercentile,
     concat_packed,
     ksplus_retry,
     pack_plans,
@@ -51,6 +52,7 @@ def _method_zoo(machine, limit=8.0, k=4):
         "k-segments-partial": KSegments(k=k, variant="partial"),
         "tovar-ppm": TovarPPM(machine_memory=machine),
         "ppm-improved": PPMImproved(machine_memory=machine),
+        "witt-p95": WittPercentile(percentile=95.0, machine_memory=machine),
         "default": DefaultMethod(limit_gb=limit, machine_memory=machine),
     }
 

@@ -1,8 +1,10 @@
 """Beyond-paper extension: per-task automatic segment-count selection."""
 
 import numpy as np
+import pytest
 
 from repro.core import KSPlus, KSPlusAuto, simulate_execution
+from repro.core.ksplus import _resample_trace
 
 
 def _two_phase_traces(n=24, seed=0):
@@ -55,3 +57,75 @@ def test_auto_protocol_compat():
     new = auto.retry(plan, t_fail=1.0, used=plan.peaks[0] * 2)
     assert new.n == plan.n
     assert auto.predict_runtime(5.0) > 0
+
+
+def _hetero_dt_traces(seed=0):
+    """Same workload as `_two_phase_traces`, but half the executions are
+    sampled twice as fast (dt=0.5, duplicated samples) — identical
+    envelopes over *time*, heterogeneous over *samples*."""
+    mems, dts, Is = _two_phase_traces(seed=seed)
+    for i in range(0, len(mems), 2):
+        mems[i] = np.repeat(mems[i], 2)
+        dts[i] = 0.5
+    return mems, dts, Is
+
+
+class TestHeterogeneousDt:
+    def test_resample_branch_warns_and_selects(self):
+        mems, dts, Is = _hetero_dt_traces()
+        auto = KSPlusAuto(candidates=(1, 2, 3, 4, 6))
+        with pytest.warns(UserWarning, match="resampling"):
+            auto.fit(mems, dts, Is)
+        assert auto.chosen_k is not None and auto.chosen_k >= 3
+        assert auto.predict(4.0).is_monotone()
+
+    def test_oracle_branch_warns_and_matches_uniform_choice(self):
+        mems, dts, Is = _hetero_dt_traces()
+        auto = KSPlusAuto(candidates=(1, 2, 3, 4, 6), hetero_dt="oracle")
+        with pytest.warns(UserWarning, match="oracle"):
+            auto.fit(mems, dts, Is)
+        # the two policies agree on this cleanly-separated workload
+        resampled = KSPlusAuto(candidates=(1, 2, 3, 4, 6))
+        with pytest.warns(UserWarning):
+            resampled.fit(mems, dts, Is)
+        assert auto.chosen_k == resampled.chosen_k
+
+    def test_uniform_dt_does_not_warn(self):
+        import warnings
+
+        mems, dts, Is = _two_phase_traces(seed=4)
+        auto = KSPlusAuto(candidates=(2, 3))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            auto.fit(mems, dts, Is)
+
+    def test_unknown_policy_raises(self):
+        mems, dts, Is = _hetero_dt_traces()
+        auto = KSPlusAuto(candidates=(2, 3), hetero_dt="bogus")
+        with pytest.raises(ValueError, match="hetero_dt"):
+            auto.fit(mems, dts, Is)
+
+    def test_unknown_policy_raises_even_on_uniform_dt(self):
+        """Config typos surface at fit time, not mid-experiment when the
+        first mixed-dt family shows up."""
+        mems, dts, Is = _two_phase_traces(seed=5)
+        auto = KSPlusAuto(candidates=(2, 3), hetero_dt="resmaple")
+        with pytest.raises(ValueError, match="hetero_dt"):
+            auto.fit(mems, dts, Is)
+
+
+class TestResampleTrace:
+    def test_identity_when_dt_matches(self):
+        m = np.arange(5.0)
+        assert _resample_trace(m, 1.0, 1.0) is m
+
+    def test_sample_and_hold_halving(self):
+        m = np.asarray([1.0, 2.0, 3.0])
+        out = _resample_trace(m, 1.0, 0.5)
+        np.testing.assert_array_equal(out, [1, 1, 2, 2, 3, 3])
+
+    def test_coarsening_keeps_duration(self):
+        m = np.arange(10.0)
+        out = _resample_trace(m, 0.5, 1.0)  # 5 s of trace at dt=1
+        assert len(out) == 5
+        np.testing.assert_array_equal(out, [0, 2, 4, 6, 8])

@@ -24,6 +24,7 @@ class TestPaperExperiment:
         res = eager_result
         assert res.methods["ks+"].total_gbs < res.methods["ppm-improved"].total_gbs
         assert res.methods["ks+"].total_gbs < res.methods["tovar-ppm"].total_gbs
+        assert res.methods["ks+"].total_gbs < res.methods["witt-p95"].total_gbs
         assert res.methods["ks+"].total_gbs < res.methods["default"].total_gbs
 
     def test_ksplus_beats_ksegments(self, eager_result):
