@@ -255,15 +255,23 @@ def bench_cluster_sim(full: bool):
         return ClusterSim(nodes(), engine="packed").run(
             build_jobs(), RetrySpec("ksplus"))
 
+    def fused():
+        return ClusterSim(nodes(), engine="fused").run(
+            build_jobs(), RetrySpec("ksplus"))
+
     def legacy():
         return ClusterSim(nodes(), engine="legacy").run(
             build_jobs(), ksplus_retry)
 
     pres, us_p = _timed(packed, repeat=3)
+    fres, us_fu = _timed(fused, repeat=3)
     lres, us_l = _timed(legacy, repeat=1, warmup=False)
 
     assert pres.placements == lres.placements, \
         "packed ClusterSim diverged from the legacy event loop"
+    assert fres.placements == lres.placements, \
+        "fused ClusterSim diverged from the legacy event loop"
+    assert fres.retries == lres.retries
     assert pres.retries == lres.retries
     assert pres.unschedulable == lres.unschedulable
     rel_err = abs(pres.total_wastage_gbs - lres.total_wastage_gbs) \
@@ -284,6 +292,9 @@ def bench_cluster_sim(full: bool):
 
     _row("cluster_sim_speedup", us_p,
          f"{us_l / us_p:.1f}x vs legacy (target >=5x, {n_jobs} jobs)")
+    _row("cluster_sim_fused_us", us_fu,
+         f"{us_l / us_fu:.1f}x vs legacy (fused engine, bitwise placements; "
+         "deep-queue wins measured by --only admission)")
     _row("cluster_sim_legacy_us", us_l,
          f"{lres.retries} retries, makespan {lres.makespan:.0f}s")
     _row("cluster_sim_wastage_rel_err", 0.0,
@@ -298,12 +309,147 @@ def bench_cluster_sim(full: bool):
         json.dump({
             "cluster_sim_jobs": n_jobs,
             "cluster_sim_speedup_x": us_l / us_p,
+            "cluster_sim_fused_speedup_x": us_l / us_fu,
             "cluster_sim_packed_us": us_p,
+            "cluster_sim_fused_us": us_fu,
             "cluster_sim_legacy_us": us_l,
             "cluster_sim_wastage_rel_err": rel_err,
             "cluster_sim_offset_sweep_us": us_sweep,
             "cluster_sim_offset_candidates": len(cands),
             "cluster_sim_placements_match": True,
+        }, f, indent=1)
+
+
+# ----------------------------------------------------------------- admission
+def bench_admission(full: bool):
+    """Fused vs numpy admission path at 10k queued jobs (high churn).
+
+    Drives the shared :class:`repro.sched.admission.AdmissionState`
+    protocol — the per-event hot path of the fused ClusterSim engine —
+    through a scripted event sequence over a 10k-deep queue on loaded
+    nodes: every event advances the clock (full invalidation + one fused
+    refresh dispatch) and then admits greedily, with the incremental
+    fits-column invalidation mask bounding the per-admission recompute.
+    The comparator replays the exact same script through the numpy
+    admission path with the packed engine's recompute strategy (one
+    :func:`fits_column` per node per event, and a full recompute of the
+    placed node's column per admission — the `cols.pop(ni)` protocol of
+    `ClusterSim._run_packed`).  Asserts the two paths place
+    bitwise-identically and dumps BENCH_admission.json (target: fused
+    >= 3x at 10k queued jobs).
+    """
+    import numpy as _np
+
+    from repro.core.envelope import PAD_START, alloc_at_packed, fits_column
+    from repro.sched.admission import AdmissionState
+
+    B = 10_000
+    K, G = 4, 64
+    caps = [48.0, 64.0, 32.0, 96.0]
+    res_per_node = 8
+    events, admits = (3, 12) if full else (2, 6)
+
+    def build(backend):
+        rng = _np.random.default_rng(0)
+        adm = AdmissionState(caps, K=K, G=G, backend=backend, use_dur=True)
+        starts = _np.full((B, K), PAD_START)
+        peaks = _np.zeros((B, K))
+        est = rng.uniform(30, 120, B)
+        grid = _np.linspace(0.0, est, G, axis=1)
+        for i in range(B):
+            k = int(rng.integers(1, K + 1))
+            starts[i, :k] = _np.sort(_np.concatenate(
+                [[0.0], rng.uniform(1, 60, k - 1)]))
+            peaks[i, :k] = _np.sort(rng.uniform(2, 12, k))
+            peaks[i, k:] = peaks[i, k - 1]
+        need = alloc_at_packed(starts, peaks, grid)
+        adm.add_lanes(starts, peaks, need, grid, dur=est)
+        lane = 0
+        for ni in range(len(caps)):  # pre-loaded residents
+            for _ in range(res_per_node):
+                adm.place(ni, lane, 0.0)
+                lane += 1
+        return adm, list(range(lane, B))
+
+    def drive_fused():
+        adm, queue = build("fused")
+        adm.columns(0.0, queue)  # warmup: jit compile outside the timing
+        placements = []
+        t0 = time.perf_counter()
+        now = 0.0
+        for _ in range(events):
+            now += 7.0  # event tick: time advance invalidates everything
+            adm.sync_now(now)
+            for _ in range(admits):
+                M = adm.columns(now, queue)
+                anyfit = M.any(axis=0)
+                if not anyfit.any():
+                    break
+                col = int(_np.argmax(anyfit))
+                ni = int(_np.argmax(M[:, col]))
+                ji = queue[col]
+                queue.remove(ji)
+                adm.place(ni, ji, now)
+                placements.append((now, ni, ji))
+        return placements, time.perf_counter() - t0
+
+    def drive_numpy():
+        # The packed engine's host strategy, verbatim: per event, each
+        # node's column is computed once over the whole queue; a placement
+        # invalidates (only) the placed node's column, which is then fully
+        # recomputed — no incremental mask, no cross-node sharing.
+        adm, queue = build("numpy")  # reuse the state container for setup
+        placements = []
+        t0 = time.perf_counter()
+        now = 0.0
+        for _ in range(events):
+            now += 7.0
+            cols = {}  # ni -> B-wide fits column (valid for current queue)
+            for _ in range(admits):
+                q = _np.asarray(queue)
+                for ni in range(len(caps)):
+                    if ni not in cols:
+                        run = adm.running[ni]
+                        ok, _ = fits_column(
+                            adm.caps[ni], adm.starts[run], adm.peaks[run],
+                            adm.admit_t[run], adm.need[q],
+                            now + adm.grid[q], dur=adm.dur[run])
+                        cols[ni] = _np.zeros(B, bool)
+                        cols[ni][q] = ok
+                M = _np.stack([cols[ni] for ni in range(len(caps))])[:, q]
+                anyfit = M.any(axis=0)
+                if not anyfit.any():
+                    break
+                col = int(_np.argmax(anyfit))
+                ni = int(_np.argmax(M[:, col]))
+                ji = queue[col]
+                queue.remove(ji)
+                adm.running[ni].append(ji)
+                adm.admit_t[ji] = now
+                cols.pop(ni)  # only the placed node's column is stale
+                placements.append((now, ni, ji))
+        return placements, time.perf_counter() - t0
+
+    pf, us_f = drive_fused()
+    pn, us_n = drive_numpy()
+    us_f *= 1e6
+    us_n *= 1e6
+    assert pf == pn, "fused admission diverged from the numpy path"
+    speedup = us_n / us_f
+    _row("admission_fused_us", us_f,
+         f"{speedup:.1f}x vs numpy path (target >=3x, {B} queued jobs, "
+         f"{events} events, {len(pf)} placements)")
+    _row("admission_numpy_us", us_n,
+         f"{len(caps)} nodes x {res_per_node} residents")
+    with open("BENCH_admission.json", "w") as f:
+        json.dump({
+            "admission_queued_jobs": B,
+            "admission_speedup_x": speedup,
+            "admission_fused_us": us_f,
+            "admission_numpy_us": us_n,
+            "admission_events": events,
+            "admission_placements": len(pf),
+            "admission_placements_match": True,
         }, f, indent=1)
 
 
@@ -392,6 +538,7 @@ BENCHES = {
     "fig8": bench_fig8_per_task,
     "fleet_sim": bench_fleet_sim,
     "cluster_sim": bench_cluster_sim,
+    "admission": bench_admission,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }

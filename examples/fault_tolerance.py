@@ -10,6 +10,8 @@
   PYTHONPATH=src python examples/fault_tolerance.py
 """
 
+import shutil
+
 import numpy as np
 
 from repro.core import AllocationPlan
@@ -19,6 +21,9 @@ from repro.sched import ElasticPlanner, plan_mesh
 
 def main():
     ckpt = "/tmp/ks_fault_demo"
+    # Fresh demo dir: a finished checkpoint left by a previous run would
+    # make the "resume" phase start past the final step.
+    shutil.rmtree(ckpt, ignore_errors=True)
     print("== phase 1: train, checkpoint, die at step 14 ==")
     out1 = train("qwen3-1.7b", steps=30, seq=64, batch=4, ckpt_dir=ckpt,
                  ckpt_every=7, kill_at_step=14, monitor=False)

@@ -17,7 +17,11 @@ Consumers:
   to float32 on the way to the device),
 * :mod:`repro.sched.cluster` / :mod:`repro.sched.elastic` — batched
   admission: node residual envelopes and fits-under-residual reductions over
-  every queued job at once.
+  every queued job at once,
+* :mod:`repro.sched.admission` — the shared fits-matrix runtime state; its
+  ``backend="numpy"`` path is :func:`fits_column` verbatim, and its jitted
+  ``backend="fused"`` kernel mirrors the same arithmetic in device float64
+  (differentially pinned in ``tests/test_admission_fused.py``).
 
 Everything here is plain float64 numpy (no JAX dependency): it is the bit
 reference the float32 device paths are differentially tested against, and it
@@ -44,6 +48,7 @@ __all__ = [
     "usage_over",
     "residual_over",
     "fits_under",
+    "fits_column",
     "retry_packed",
 ]
 
@@ -253,6 +258,24 @@ def fits_under(need: np.ndarray, resid: np.ndarray,
     over the trailing (grid) axis — the scheduler's admission predicate for
     every queued job at once."""
     return np.all(np.asarray(need) <= np.asarray(resid) + tol, axis=-1)
+
+
+def fits_column(capacity: float, run_starts: np.ndarray,
+                run_peaks: np.ndarray, run_t0: np.ndarray,
+                need: np.ndarray, grid_abs: np.ndarray,
+                dur: np.ndarray | None = None, tol: float = 1e-9):
+    """One node's admission column: ``(fits, resid)`` for every queued job.
+
+    The float64 reference the fused admission kernel is pinned to:
+    ``resid`` is the node's residual envelope under its resident
+    (time-shifted, optionally windowed) allocations evaluated on each
+    queued job's absolute horizon grid, and ``fits`` the pointwise
+    admission predicate.  Shapes: ``run_*`` are the ``R`` resident
+    envelopes, ``need``/``grid_abs`` are ``(Q, G)``.
+    """
+    resid = residual_over(capacity, run_starts, run_peaks, run_t0,
+                          grid_abs, dur)
+    return fits_under(need, resid, tol), resid
 
 
 def retry_packed(spec: RetrySpec, starts: np.ndarray, peaks: np.ndarray,

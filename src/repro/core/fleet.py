@@ -47,6 +47,7 @@ __all__ = [
     "FleetResult",
     "pack_plans",
     "pack_traces",
+    "pad_lane_axis",
     "bucket_traces",
     "fleet_eval",
     "first_attempt",
@@ -559,21 +560,39 @@ def _bucket(b: int, lo: int = 8) -> int:
     return max(lo, 1 << (b - 1).bit_length())
 
 
+def pad_lane_axis(arrs: Sequence[np.ndarray], fills: Sequence,
+                  lo: int = 8, fine: bool = False) -> tuple:
+    """Pad every array's leading (lane) axis to a shared bucket size.
+
+    The compaction trick shared by the fleet retry engine and the fused
+    admission engine: gather the active minority into compact rows, then
+    pad the lane axis to a bucketed size so the jitted consumers see a
+    bounded set of shapes instead of one compile per lane count.
+    ``fine=False`` pads to the next power of two (log2-many shapes, up to
+    ~2x padding); ``fine=True`` pads to the next multiple of 1/8th of the
+    next power of two (8 shapes per octave, <= 25% worst-case padding
+    waste — for the admission engine's deep queues, where a 2x pad would
+    double the per-dispatch work).
+    ``fills[i]`` is the pad value for ``arrs[i]``; dtypes are preserved.
+    """
+    B = int(arrs[0].shape[0])
+    Bp = _bucket(B, lo)
+    if fine and Bp > lo:
+        step = max(Bp // 8, lo)
+        Bp = ((B + step - 1) // step) * step
+    if Bp == B:
+        return tuple(arrs)
+    return tuple(
+        np.concatenate(
+            [a, np.full((Bp - B,) + a.shape[1:], fill, a.dtype)])
+        for a, fill in zip(arrs, fills))
+
+
 def _pad_lanes(starts, peaks, nseg, mems, lengths):
     """Pad the lane axis to a power of two (dummy lanes trivially succeed)."""
-    B = starts.shape[0]
-    Bp = _bucket(B)
-    if Bp == B:
-        return starts, peaks, nseg, mems, lengths
-    pad = Bp - B
-    return (
-        np.concatenate(
-            [starts, np.full((pad, starts.shape[1]), PAD_START, np.float32)]),
-        np.concatenate([peaks, np.ones((pad, peaks.shape[1]), np.float32)]),
-        np.concatenate([nseg, np.ones((pad,), np.int32)]),
-        np.concatenate([mems, np.zeros((pad, mems.shape[1]), np.float32)]),
-        np.concatenate([lengths, np.zeros((pad,), np.int32)]),
-    )
+    return pad_lane_axis(
+        (starts, peaks, nseg, mems, lengths),
+        (PAD_START, 1.0, 1, 0.0, 0))
 
 
 def _as_batch(mems) -> FleetBatch:

@@ -279,6 +279,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # cost_analysis() returns a list of per-computation dicts on some JAX
+    # versions and a flat dict on others; normalize both shapes.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     n_dev = mesh.size
     hlo = compiled.as_text()
     coll = parse_collectives(hlo, default_group=n_dev)

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.launch.partitioning import auto_axis_types
+
 __all__ = ["make_production_mesh", "make_local_mesh", "HW"]
 
 
@@ -16,17 +18,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (16, 16) ("data", "model"); two pods: (2, 16, 16)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_local_mesh():
     """Degenerate mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((n, 1), ("data", "model"), **auto_axis_types(2))
 
 
 class HW:

@@ -21,12 +21,26 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "default_rules", "mesh_context", "logical_constraint", "spec_for",
     "sharding_for", "tree_shardings", "current_mesh", "current_batch_shards",
-    "current_batch_axes",
+    "current_batch_axes", "auto_axis_types",
 ]
 
 AxisName = Union[str, Tuple[str, ...], None]
 
 _state = threading.local()
+
+
+def auto_axis_types(n_axes: int) -> Dict[str, tuple]:
+    """``axis_types=(AxisType.Auto, ...)`` kwargs for ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` only exists on JAX versions with explicit
+    sharding (>= 0.5); earlier releases neither expose it nor accept the
+    ``axis_types`` kwarg, and their meshes are implicitly Auto.  Splat the
+    result (``**auto_axis_types(n)``) so both eras build the same mesh.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def default_rules(mesh: Mesh) -> Dict[str, AxisName]:

@@ -1,5 +1,6 @@
 """Scheduler layer: trace-driven evaluation, cluster sim, monitoring, elastic."""
 
+from repro.sched.admission import AdmissionState
 from repro.sched.cluster import (
     ClusterResult,
     ClusterSim,
@@ -18,6 +19,7 @@ from repro.sched.simulator import (
 )
 
 __all__ = [
+    "AdmissionState",
     "ClusterResult", "ClusterSim", "Job", "Node", "OffsetCandidate",
     "ElasticPlanner", "plan_mesh",
     "HBMFootprintModel", "MemoryMonitor", "read_rss_gb",

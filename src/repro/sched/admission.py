@@ -1,0 +1,404 @@
+"""Shared admission runtime state: one fits matrix, one invalidation protocol.
+
+Both admission paths — :class:`repro.sched.cluster.ClusterSim`'s packed
+event loop and :class:`repro.sched.elastic.ElasticPlanner`'s churn-driven
+``drain`` — answer the same question at every decision point: *which queued
+envelopes fit under which node's residual envelope right now?*  This module
+owns that answer as explicit runtime state instead of a per-call
+recomputation:
+
+* a **fits matrix** ``(N nodes, B lanes)`` of admission predicates plus a
+  per-entry **validity mask** — the single source of truth for "does lane b
+  fit node n at the current time",
+* one **invalidation protocol** (see :class:`AdmissionState`):
+
+  - advancing ``now`` invalidates everything (residuals are functions of
+    absolute time),
+  - *placing* a lane on a node invalidates only the node's currently-True
+    entries — adding an envelope can only shrink the residual, so False
+    entries stay False without recomputation (monotonicity),
+  - *releasing* a lane from a node invalidates the node's whole column
+    (the residual grew; False entries may flip True),
+  - a lane's plan change (retry re-plan) invalidates that lane everywhere,
+  - node join/leave adds/drops a row,
+
+* two interchangeable compute backends:
+
+  - ``backend="numpy"`` — the float64 host reference: per-node
+    :func:`repro.core.envelope.residual_over` + ``fits_under`` calls,
+    exactly the arithmetic the packed ``ClusterSim`` engine inlines,
+  - ``backend="fused"`` — ONE jitted XLA dispatch per refresh computing
+    every invalid ``(node, lane)`` entry at once on device-resident
+    float64 state (``jax.experimental.enable_x64`` scopes the 64-bit
+    semantics to these calls).  The packed envelope/need/placement-time
+    buffers live on the device and are updated in place through donated
+    scatter programs, so the per-event hot path is one fused dispatch
+    over the already-packed ``(B, K)`` layout — not a Python loop over
+    nodes and queued jobs.
+
+Precision contract (see also :mod:`repro.sched.cluster`): both backends
+evaluate residuals and admission predicates in float64 with identical
+elementwise operations; the only permitted divergence is the summation
+order over a node's resident envelopes (numpy reduces linearly, XLA may
+tree-reduce), i.e. last-ulp differences ~1e-16 relative.  A decision can
+therefore only differ between backends when a lane's need grazes the
+residual within one float64 ulp of the 1e-9 admission tolerance — orders
+of magnitude below any real trace/plan margin.
+
+Shapes are kept jit-stable by padding the queued-lane and resident-lane
+axes to power-of-two buckets (:func:`repro.core.fleet.pad_lane_axis`, the
+fleet engine's compaction trick), bounding compilation to log2-many shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.envelope import fits_column
+
+__all__ = ["AdmissionState"]
+
+_KERNEL_CACHE = {}
+
+
+def _fused_kernel(masked: bool):
+    """Build (once) the jitted fused fits-columns program.
+
+    Computes, for every requested node and queued lane at once::
+
+        resid[n, q, g] = cap[n] - sum_r alloc_r(now + grid[q, g] - t0[r])
+        fits[n, q]     = all_g need[q, g] <= resid[n, q, g] + tol
+        minresid[n, q] = min_g resid[n, q, g]
+
+    mirroring ``residual_over`` / ``fits_under`` elementwise in float64.
+    ``masked`` (static) selects the anticipating-residual semantics
+    (resident envelopes only count inside ``[t0, t0 + dur)``, the cluster
+    simulator's rule) vs. the conservative count-forever semantics (the
+    elastic planner's rule, ``usage_over`` with ``dur=None``).
+    """
+    if masked in _KERNEL_CACHE:
+        return _KERNEL_CACHE[masked]
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(starts, peaks, admit_t, dur, need, grid,
+               caps, run_idx, run_valid, q_idx, now, tol):
+        N, R = run_idx.shape
+        K = starts.shape[1]
+        G = grid.shape[1]
+        flat = run_idx.reshape(-1)
+        rs = starts[flat]                        # (N*R, K)
+        rp = peaks[flat]
+        rt0 = admit_t[flat]                      # (N*R,)
+        t = (now + grid[q_idx]).reshape(-1)      # (Q*G,) absolute times
+        rel = t[None, :] - rt0[:, None]          # (N*R, Q*G)
+        relc = jnp.maximum(rel, 0.0)
+        # Step-function evaluation as a K-step select chain: with ascending
+        # starts, the last satisfied "starts_k <= t" wins — exactly
+        # ``searchsorted(side='right') - 1`` clipped to [0, K-1], without
+        # materializing the (lanes, times, K) one-hot tensor.
+        alloc = jnp.broadcast_to(rp[:, 0:1], relc.shape)
+        for k in range(1, K):
+            alloc = jnp.where(rs[:, k:k + 1] <= relc, rp[:, k:k + 1], alloc)
+        if masked:
+            rdur = dur[flat]
+            active = (rel >= 0.0) & (rel < rdur[:, None] + 1e-9)
+            alloc = jnp.where(active, alloc, 0.0)
+        alloc = jnp.where(run_valid.reshape(-1)[:, None], alloc, 0.0)
+        usage = alloc.reshape(N, R, -1).sum(axis=1)          # (N, Q*G)
+        resid = (caps[:, None] - usage).reshape(N, -1, G)    # (N, Q, G)
+        fits = jnp.all(need[q_idx][None, :, :] <= resid + tol, axis=-1)
+        minresid = jnp.min(resid, axis=-1)
+        return fits, minresid
+
+    _KERNEL_CACHE[masked] = kernel
+    return kernel
+
+
+def _scatter_rows_fn():
+    """Donated-buffer row scatter: the in-place device update primitive."""
+    if "scatter" in _KERNEL_CACHE:
+        return _KERNEL_CACHE["scatter"]
+    import jax
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def scatter(buf, rows, vals):
+        return buf.at[rows].set(vals)
+
+    _KERNEL_CACHE["scatter"] = scatter
+    return scatter
+
+
+class AdmissionState:
+    """Fits matrix + invalidation protocol over packed ``(B, K)`` envelopes.
+
+    Lanes (queued/resident jobs) carry a packed envelope, a relative
+    admission grid with its precomputed ``need`` evaluation, a placement
+    time and an active-window duration; nodes carry a capacity and the
+    list of resident lanes.  ``columns()`` refreshes every invalid
+    ``(node, lane)`` entry for the requested lanes — one fused dispatch on
+    the jitted backend — and returns the fits matrix slice; ``place`` /
+    ``release`` / ``update_lane`` / ``add_node`` / ``remove_node`` keep
+    the validity mask honest (the churn test drives exactly this contract).
+
+    ``use_dur=False`` selects the elastic planner's conservative
+    count-forever residual (``usage_over`` with ``dur=None``).
+    """
+
+    def __init__(self, caps: Sequence[float], K: int, G: int,
+                 backend: str = "fused", use_dur: bool = True,
+                 tol: float = 1e-9):
+        if backend not in ("fused", "numpy"):
+            raise ValueError(f"unknown admission backend: {backend!r}")
+        self.backend = backend
+        self.use_dur = bool(use_dur)
+        self.tol = float(tol)
+        self.K = int(K)
+        self.G = int(G)
+        self.caps = np.asarray(caps, np.float64).copy()
+        N = len(self.caps)
+        self.running: List[List[int]] = [[] for _ in range(N)]
+        # Lane state (grows via add_lanes).
+        self.starts = np.zeros((0, self.K), np.float64)
+        self.peaks = np.zeros((0, self.K), np.float64)
+        self.need = np.zeros((0, self.G), np.float64)
+        self.grid = np.zeros((0, self.G), np.float64)
+        self.admit_t = np.zeros((0,), np.float64)
+        self.dur = np.zeros((0,), np.float64)
+        # The shared runtime state: fits matrix + validity mask.
+        self.fits = np.zeros((N, 0), bool)
+        self.minresid = np.zeros((N, 0), np.float64)
+        self.valid = np.zeros((N, 0), bool)
+        self._now: Optional[float] = None
+        self._dirty_dev = True  # device mirrors need a (re)upload
+
+    # ------------------------------------------------------------- lane mgmt
+    @property
+    def B(self) -> int:
+        return int(self.starts.shape[0])
+
+    @property
+    def N(self) -> int:
+        return int(self.caps.shape[0])
+
+    def ensure_k(self, k: int):
+        """Grow the packed segment axis (rare: a new lane with more
+        segments than any seen).  Padding follows the PackedEnvelopes
+        convention — sentinel starts, replicated last peak — so existing
+        lanes evaluate identically."""
+        if k <= self.K:
+            return
+        from repro.core.envelope import PAD_START
+        pad = k - self.K
+        B = self.B
+        self.starts = np.concatenate(
+            [self.starts, np.full((B, pad), PAD_START)], axis=1)
+        last = (self.peaks[:, -1:] if self.K else np.zeros((B, 1)))
+        self.peaks = np.concatenate(
+            [self.peaks, np.repeat(last, pad, axis=1)], axis=1)
+        self.K = k
+        self._dirty_dev = True
+
+    def add_lanes(self, starts, peaks, need, grid,
+                  dur=None) -> np.ndarray:
+        """Append lanes; returns their indices.  New entries are invalid."""
+        starts = np.asarray(starts, np.float64).reshape(-1, self.K)
+        n = starts.shape[0]
+        self.starts = np.concatenate([self.starts, starts])
+        self.peaks = np.concatenate(
+            [self.peaks, np.asarray(peaks, np.float64).reshape(n, self.K)])
+        self.need = np.concatenate(
+            [self.need, np.asarray(need, np.float64).reshape(n, self.G)])
+        self.grid = np.concatenate(
+            [self.grid, np.asarray(grid, np.float64).reshape(n, self.G)])
+        self.admit_t = np.concatenate([self.admit_t, np.zeros(n)])
+        self.dur = np.concatenate(
+            [self.dur,
+             np.full(n, np.inf) if dur is None
+             else np.asarray(dur, np.float64).reshape(n)])
+        pad = np.zeros((self.N, n), bool)
+        self.fits = np.concatenate([self.fits, pad], axis=1)
+        self.valid = np.concatenate([self.valid, pad.copy()], axis=1)
+        self.minresid = np.concatenate(
+            [self.minresid, np.zeros((self.N, n))], axis=1)
+        self._dirty_dev = True
+        return np.arange(self.B - n, self.B)
+
+    def update_lane(self, lane: int, starts, peaks, need):
+        """Re-plan a lane; its column is invalid on every node.
+
+        If the lane is currently *resident* somewhere (a live re-size
+        rather than a queued retry), that node's residual changed for
+        every queued lane — its whole row is invalidated too.
+        """
+        self.starts[lane] = starts
+        self.peaks[lane] = peaks
+        self.need[lane] = need
+        self.valid[:, lane] = False
+        for ni, run in enumerate(self.running):
+            if lane in run:
+                self.valid[ni] = False
+        self._push_lane(lane)
+
+    # ------------------------------------------------------------- node mgmt
+    def add_node(self, cap: float) -> int:
+        self.caps = np.concatenate([self.caps, [float(cap)]])
+        self.running.append([])
+        B = self.B
+        self.fits = np.concatenate([self.fits, np.zeros((1, B), bool)])
+        self.valid = np.concatenate([self.valid, np.zeros((1, B), bool)])
+        self.minresid = np.concatenate([self.minresid, np.zeros((1, B))])
+        return self.N - 1
+
+    def remove_node(self, ni: int) -> List[int]:
+        """Drop a node row; returns the lanes that were resident on it."""
+        evicted = self.running[ni]
+        self.caps = np.delete(self.caps, ni)
+        del self.running[ni]
+        self.fits = np.delete(self.fits, ni, axis=0)
+        self.valid = np.delete(self.valid, ni, axis=0)
+        self.minresid = np.delete(self.minresid, ni, axis=0)
+        return evicted
+
+    # ----------------------------------------------------------- invalidation
+    def sync_now(self, now: float):
+        """Advance the clock; residuals are time functions, so a new ``now``
+        invalidates every cached entry."""
+        if self._now is None or now != self._now:
+            self.valid[:] = False
+            self._now = float(now)
+
+    def place(self, ni: int, lane: int, now: float):
+        """Resident set grows: only the node's True entries can change
+        (residual shrank monotonically), so False entries stay valid."""
+        self.running[ni].append(lane)
+        self.admit_t[lane] = now
+        self.valid[ni] &= ~self.fits[ni]
+        self._push_admit(lane)
+
+    def release(self, ni: int, lane: int):
+        """Resident set shrinks: the residual grew, False entries may flip
+        True — the node's whole column is invalid."""
+        self.running[ni].remove(lane)
+        self.valid[ni] = False
+
+    def is_valid(self, ni: int, lane: int) -> bool:
+        return bool(self.valid[ni, lane])
+
+    # ---------------------------------------------------------------- refresh
+    def columns(self, now: float, lanes: Sequence[int]) -> np.ndarray:
+        """Fits matrix slice ``(N, len(lanes))``, refreshed where invalid.
+
+        One fused dispatch per call on the jitted backend: every invalid
+        ``(node, lane)`` entry across all nodes is recomputed at once.
+        """
+        self.sync_now(now)
+        lanes = np.asarray(lanes, np.int64)
+        stale = ~self.valid[:, lanes]
+        if stale.any():
+            todo = lanes[stale.any(axis=0)]
+            nodes = np.nonzero(stale.any(axis=1))[0]
+            if self.backend == "numpy":
+                self._refresh_numpy(nodes, todo)
+            else:
+                self._refresh_fused(nodes, todo)
+            self.valid[np.ix_(nodes, todo)] = True
+        return self.fits[:, lanes]
+
+    def _refresh_numpy(self, nodes: np.ndarray, lanes: np.ndarray):
+        """Float64 host reference: per-node :func:`fits_column` — the
+        exact arithmetic of the packed ClusterSim engine."""
+        grid_abs = self._now + self.grid[lanes]
+        for ni in nodes:
+            run = self.running[ni]
+            ok, resid = fits_column(
+                self.caps[ni], self.starts[run], self.peaks[run],
+                self.admit_t[run], self.need[lanes], grid_abs,
+                dur=self.dur[run] if self.use_dur else None, tol=self.tol)
+            self.fits[ni, lanes] = ok
+            self.minresid[ni, lanes] = resid.min(axis=-1)
+
+    # ------------------------------------------------------------ fused path
+    def _dev_sync(self):
+        """(Re)upload the packed lane state to the device (bulk path; the
+        incremental paths go through donated scatters)."""
+        import jax.numpy as jnp
+        self._dstarts = jnp.asarray(self.starts)
+        self._dpeaks = jnp.asarray(self.peaks)
+        self._dneed = jnp.asarray(self.need)
+        self._dgrid = jnp.asarray(self.grid)
+        self._dadmit = jnp.asarray(self.admit_t)
+        self._ddur = jnp.asarray(self.dur)
+        self._dirty_dev = False
+
+    def _push_lane(self, lane: int):
+        if self.backend == "numpy" or self._dirty_dev:
+            return
+        self._push_lanes(np.asarray([lane]))
+
+    def _push_lanes(self, lanes: np.ndarray):
+        """In-place device update of re-planned lanes (donated buffers)."""
+        if self.backend == "numpy" or self._dirty_dev:
+            return
+        from jax.experimental import enable_x64
+        scatter = _scatter_rows_fn()
+        with enable_x64():
+            import jax.numpy as jnp
+            rows = jnp.asarray(np.asarray(lanes, np.int32))
+            self._dstarts = scatter(self._dstarts, rows,
+                                    jnp.asarray(self.starts[lanes]))
+            self._dpeaks = scatter(self._dpeaks, rows,
+                                   jnp.asarray(self.peaks[lanes]))
+            self._dneed = scatter(self._dneed, rows,
+                                  jnp.asarray(self.need[lanes]))
+
+    def _push_admit(self, lane: int):
+        if self.backend == "numpy" or self._dirty_dev:
+            return
+        from jax.experimental import enable_x64
+        scatter = _scatter_rows_fn()
+        with enable_x64():
+            import jax.numpy as jnp
+            self._dadmit = scatter(
+                self._dadmit, jnp.asarray(np.asarray([lane], np.int32)),
+                jnp.asarray(self.admit_t[lane:lane + 1]))
+
+    def _refresh_fused(self, nodes: np.ndarray, lanes: np.ndarray):
+        """One fused XLA dispatch for every invalid (node, lane) entry.
+
+        Only the stale node rows enter the dispatch — after a placement,
+        that is a single node over the previously-True lanes, not the
+        whole matrix.
+        """
+        from jax.experimental import enable_x64
+        import jax.numpy as jnp
+
+        from repro.core.fleet import pad_lane_axis
+
+        kernel = _fused_kernel(self.use_dur)
+        sel = [self.running[ni] for ni in nodes]
+        rmax = max(max((len(r) for r in sel), default=0), 1)
+        rmax = 1 << (rmax - 1).bit_length()
+        run_idx = np.zeros((len(nodes), rmax), np.int32)
+        run_valid = np.zeros((len(nodes), rmax), bool)
+        for i, run in enumerate(sel):
+            run_idx[i, :len(run)] = run
+            run_valid[i, :len(run)] = True
+        (q_idx,) = pad_lane_axis(
+            (np.asarray(lanes, np.int32),), (0,), lo=8, fine=True)
+        nq = len(lanes)
+        with enable_x64():
+            if self._dirty_dev:
+                self._dev_sync()
+            fits, minresid = kernel(
+                self._dstarts, self._dpeaks, self._dadmit, self._ddur,
+                self._dneed, self._dgrid,
+                jnp.asarray(self.caps[nodes]), jnp.asarray(run_idx),
+                jnp.asarray(run_valid), jnp.asarray(q_idx),
+                jnp.float64(self._now), jnp.float64(self.tol))
+        self.fits[np.ix_(nodes, lanes)] = np.asarray(fits)[:, :nq]
+        self.minresid[np.ix_(nodes, lanes)] = np.asarray(minresid)[:, :nq]

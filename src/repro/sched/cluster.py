@@ -10,15 +10,26 @@ allocation envelope fits under the node's *residual envelope* for the whole
 projected runtime; the OOM killer fires when a job's hidden trace exceeds
 its own allocation, triggering the method's retry strategy.
 
-Two engines share the event semantics:
+Three engines share the event semantics:
 
-* ``engine="packed"`` (default) — all job plans live in one packed
+* ``engine="fused"`` (default) — the packed layout below, with the
+  per-event hot path moved off the host: the admission check is ONE jitted
+  XLA dispatch per event over every (node, queued job) pair at once
+  (:class:`repro.sched.admission.AdmissionState` — device-resident packed
+  state, donated-buffer updates, and an incremental fits-column
+  invalidation mask instead of full per-admission recompute), and OOM
+  retries that land at the same event time are compacted into one
+  multi-row :func:`retry_packed` / re-probe slice (the fleet engine's
+  compaction trick) instead of one Python round-trip per lane.
+* ``engine="packed"`` — all job plans live in one packed
   ``(B, K)`` envelope batch (:mod:`repro.core.envelope`); the admission
   check is a single vectorized fits-under-residual reduction across every
   queued job per node, OOM times come from one batched
   :func:`repro.core.fleet.first_attempt` probe over the whole workload
   (device-resident traces), wastage is O(K) span arithmetic, and retry
-  re-plans flow through :class:`RetrySpec` / :func:`retry_packed`.
+  re-plans flow through :class:`RetrySpec` / :func:`retry_packed`.  Kept
+  as the host-side float64 reference the fused engine is differentially
+  pinned to (``tests/test_admission_fused.py``).
 * ``engine="legacy"`` — the original per-job Python event loop, kept as the
   decision-for-decision oracle the packed engine is differentially tested
   against (``tests/test_cluster_packed.py``) and benchmarked against
@@ -32,6 +43,18 @@ margins exceed float32 resolution (~1e-7 relative) — true for the
 differential workloads and for any real monitoring data, but a trace that
 grazes its allocation within one float32 ulp may OOM under one engine and
 not the other.
+
+Fused-admission precision contract: the fused engine keeps the float32
+attempt-#1 probe AND the float64 post-retry probes/wastage of the packed
+engine; its admission residuals run in float64 *on the device*
+(``jax.experimental.enable_x64`` scopes 64-bit semantics to those
+dispatches) with the same elementwise operations as the host path.  The
+only permitted divergence is the summation order over a node's resident
+envelopes (numpy reduces linearly, XLA may tree-reduce) — last-ulp
+(~1e-16 relative) residual differences, so an admission decision can only
+flip when a job's need grazes the residual within one float64 ulp of the
+1e-9 admission tolerance.  The differential suite pins the two engines'
+placement logs bitwise on workloads with real margins.
 
 ``run(offsets=[...])`` sweeps peak/start safety offsets and
 ``last_peak_bump`` the way :class:`KSPlusAuto` sweeps k: plans are re-packed
@@ -156,8 +179,8 @@ class ClusterSim:
     """
 
     def __init__(self, nodes: List[Node], max_attempts: int = 20,
-                 engine: str = "packed"):
-        if engine not in ("packed", "legacy"):
+                 engine: str = "fused"):
+        if engine not in ("fused", "packed", "legacy"):
             raise ValueError(f"unknown engine: {engine!r}")
         self.nodes = nodes
         self.max_attempts = max_attempts
@@ -178,12 +201,14 @@ class ClusterSim:
         """
         if self.engine == "legacy":
             if offsets is not None:
-                raise ValueError("offset sweeps require engine='packed'")
+                raise ValueError("offset sweeps require a batched engine")
             return self._run_legacy(jobs, retry)
+        run_one = (self._run_fused if self.engine == "fused"
+                   else self._run_packed)
         if offsets is None:
-            return self._run_packed(jobs, retry, None, None, write_back=True)
+            return run_one(jobs, retry, None, None, write_back=True)
         shared = self._pack_shared(jobs)
-        return [self._run_packed(jobs, retry, cand, shared, write_back=False)
+        return [run_one(jobs, retry, cand, shared, write_back=False)
                 for cand in offsets]
 
     # ---------------------------------------------------------- legacy loop
@@ -324,17 +349,16 @@ class ClusterSim:
         pk = np.maximum(env.peaks * (1.0 + cand.peak), 1e-6)
         return st, pk
 
-    def _run_packed(self, jobs: List[Job], retry,
-                    offset: Optional[OffsetCandidate], shared,
-                    write_back: bool) -> ClusterResult:
-        if not jobs:
-            return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
-                                 offset=offset)
+    def _prep_packed(self, jobs: List[Job], retry,
+                     offset: Optional[OffsetCandidate], shared):
+        """Shared packed-engine setup (plans, grids, probes) — used
+        verbatim by both the host-side packed loop and the fused loop so
+        the two engines start from identical state."""
         if any(node.running for node in self.nodes):
             # Resident jobs live outside the packed batch; admitting around
             # them silently would diverge from the legacy loop.
             raise ValueError(
-                "engine='packed' requires empty Node.running; submit "
+                "batched engines require empty Node.running; submit "
                 "resident jobs as part of `jobs` or use engine='legacy'")
         spec, retry_fn = _as_spec(retry)
         if offset is not None and offset.last_peak_bump is not None:
@@ -372,6 +396,20 @@ class ClusterSim:
         # Attempt-#1 OOM probe, one batched dispatch per dt group.
         shared = shared if shared is not None else self._pack_shared(jobs)
         viol = self._initial_viol(starts, peaks, shared, B)
+        return (spec, retry_fn, starts, peaks, nseg, K, dts, lengths,
+                runtimes, summem, peak_demand, caps, cap_max, grid_rel,
+                need, bounds, viol)
+
+    def _run_packed(self, jobs: List[Job], retry,
+                    offset: Optional[OffsetCandidate], shared,
+                    write_back: bool) -> ClusterResult:
+        if not jobs:
+            return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
+                                 offset=offset)
+        (spec, retry_fn, starts, peaks, nseg, K, dts, lengths, runtimes,
+         summem, peak_demand, caps, cap_max, grid_rel, need, bounds,
+         viol) = self._prep_packed(jobs, retry, offset, shared)
+        B = len(jobs)
 
         # Mutable replay state.  attempts/wastage continue from the Job
         # counters, exactly like the legacy loop's in-place accumulation.
@@ -483,6 +521,211 @@ class ClusterSim:
                         lengths[row], float(dts[ji]))[0]
                     queue.append(ji)
             try_admit(t)
+
+        if write_back:
+            for i, job in enumerate(jobs):
+                job.attempts = int(attempts[i])
+                job.wasted_gbs = float(wasted[i])
+                if attempts[i] > attempts0[i]:  # plan changed by retries
+                    s, p = PackedEnvelopes(starts, peaks, nseg).row(i)
+                    job.plan = AllocationPlan(starts=s, peaks=p)
+
+        total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
+        return ClusterResult(
+            makespan=done_at,
+            total_wastage_gbs=float(wasted.sum()),
+            retries=retries,
+            unschedulable=unschedulable,
+            avg_utilization=area_used / total_cap_area,
+            placements=placements,
+            offset=offset,
+        )
+
+    # ----------------------------------------------------------- fused loop
+    def _run_fused(self, jobs: List[Job], retry,
+                   offset: Optional[OffsetCandidate], shared,
+                   write_back: bool,
+                   admission_backend: str = "fused") -> ClusterResult:
+        """Packed event loop with the per-event hot path fused into XLA.
+
+        Decision-for-decision identical to :meth:`_run_packed` (the
+        differential suite pins the placement logs bitwise); differs in
+        *how* the work is done:
+
+        * admission — :class:`repro.sched.admission.AdmissionState`: one
+          jitted float64 dispatch per event over every (node, queued lane)
+          pair, then incremental recomputes of only the invalidated
+          entries after each placement, instead of full per-node numpy
+          columns per admission;
+        * retries — all OOMs that land at the same event time are
+          compacted into one multi-row ``retry_packed`` re-plan, one
+          batched ``need``/``bounds`` refresh and one batched float64
+          re-probe per dt group, instead of one 1-row slice per event.
+        """
+        if not jobs:
+            return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
+                                 offset=offset)
+        from repro.sched.admission import AdmissionState
+
+        (spec, retry_fn, starts, peaks, nseg, K, dts, lengths, runtimes,
+         summem, peak_demand, caps, cap_max, grid_rel, need, bounds,
+         viol) = self._prep_packed(jobs, retry, offset, shared)
+        B = len(jobs)
+
+        attempts0 = np.asarray([j.attempts for j in jobs], np.int64)
+        attempts = attempts0.copy()
+        wasted = np.asarray([j.wasted_gbs for j in jobs], np.float64)
+        adm = AdmissionState(caps, K=K, G=ADMIT_GRID,
+                             backend=admission_backend, use_dur=True)
+        adm.add_lanes(starts, peaks, need, grid_rel, dur=runtimes)
+        queue: List[int] = list(range(B))
+        events: List[Tuple[float, int, str, int, int]] = []
+        seq = itertools.count()
+        retries = 0
+        unschedulable = 0
+        area_used = 0.0
+        done_at = 0.0
+        placements: List[Tuple[float, int, int]] = []
+
+        def try_admit(now: float):
+            """Greedy drain on the shared fits matrix.
+
+            Decision-equivalent to the packed loop's job-by-job scan:
+            admissions only shrink residuals, so an unfit job can never
+            become fit within one drain — the first fitting job in queue
+            order under the current state is exactly the next job the
+            per-job scan would admit.  Each iteration refreshes the
+            invalidated entries (one fused dispatch) and picks the first
+            (job, node) pair in (queue, node) order from the matrix.
+            """
+            adm.sync_now(now)
+            while queue:
+                adm.columns(now, queue)  # one dispatch for invalid entries
+                q = np.asarray(queue)
+                M = adm.fits[:, q]       # (N, Q) — all entries now valid
+                anyfit = M.any(axis=0)
+                if not anyfit.any():
+                    break
+                col = int(np.argmax(anyfit))
+                ni = int(np.argmax(M[:, col]))
+                ji = int(q[col])
+                queue.remove(ji)
+                adm.place(ni, ji, now)
+                placements.append(
+                    (float(now), self.nodes[ni].nid, jobs[ji].jid))
+                v = viol[ji]
+                if v < 0:
+                    heapq.heappush(events, (now + runtimes[ji], next(seq),
+                                            "done", ni, ji))
+                else:
+                    heapq.heappush(events, (now + v * dts[ji], next(seq),
+                                            "oom", ni, ji))
+
+        try_admit(0.0)
+        guard = 0
+        while events:
+            # Drain the maximal same-time prefix: events pushed *during*
+            # this batch land behind it in (t, seq) order, exactly where
+            # the one-at-a-time loop would pop them.
+            t = events[0][0]
+            batch: List[Tuple[float, int, str, int, int]] = []
+            while events and events[0][0] == t:
+                batch.append(heapq.heappop(events))
+            guard += len(batch)
+            if guard > 200_000:
+                raise RuntimeError("cluster sim did not converge")
+
+            # Stage wastage for the whole batch against the *pre-retry*
+            # plans (compacted multi-row span arithmetic).
+            done_idx = [ji for (_, _, k, _, ji) in batch if k == "done"]
+            oom_idx = [ji for (_, _, k, _, ji) in batch if k == "oom"]
+            w_done: Dict[int, float] = {}
+            w_oom: Dict[int, float] = {}
+            if done_idx:
+                rows = np.asarray(done_idx)
+                w = span_alloc_sum(peaks[rows], bounds[rows], lengths[rows])
+                w_done = dict(zip(done_idx, w))
+            if oom_idx:
+                rows = np.asarray(oom_idx)
+                w = span_alloc_sum(peaks[rows], bounds[rows],
+                                   viol[rows] + 1)
+                w_oom = dict(zip(oom_idx, w))
+
+            # Event-batched retries: compact the retrying minority into one
+            # multi-row re-plan + refresh (lane-local, so staging it before
+            # the per-event processing below cannot change any decision —
+            # a lane only becomes visible to admission once it is queued).
+            retry_set = [
+                ji for ji in oom_idx
+                if attempts[ji] + 1 < self.max_attempts
+                and peak_demand[ji] <= cap_max]
+            if retry_set:
+                rows = np.asarray(retry_set)
+                if spec is not None:
+                    ns, npk = retry_packed(
+                        spec, starts[rows], peaks[rows], nseg[rows],
+                        viol[rows] * dts[rows],
+                        np.asarray([float(jobs[ji].mem[viol[ji]])
+                                    for ji in retry_set]),
+                        machine_memory=cap_max)
+                    starts[rows], peaks[rows] = ns, npk
+                else:
+                    for ji in retry_set:
+                        s, p = PackedEnvelopes(starts, peaks, nseg).row(ji)
+                        new = retry_fn(AllocationPlan(s, p),
+                                       float(viol[ji] * dts[ji]),
+                                       float(jobs[ji].mem[viol[ji]]))
+                        starts[ji, :new.n] = new.starts
+                        starts[ji, new.n:] = PAD_START
+                        peaks[ji, :new.n] = new.peaks
+                        peaks[ji, new.n:] = new.peaks[-1]
+                        nseg[ji] = new.n
+                # Refresh derived state for all retried lanes at once;
+                # post-retry probes stay float64 (precision contract), one
+                # batched pass per dt group.
+                need[rows] = alloc_at_packed(
+                    starts[rows], peaks[rows], grid_rel[rows])
+                bounds[rows] = segment_sample_bounds(
+                    starts[rows], dts[rows][:, None])
+                by_dt: Dict[float, List[int]] = {}
+                for ji in retry_set:
+                    by_dt.setdefault(float(dts[ji]), []).append(ji)
+                for dtv, lanes in by_dt.items():
+                    g = np.asarray(lanes)
+                    tmax = int(lengths[g].max())
+                    mems = np.zeros((len(lanes), tmax), np.float64)
+                    for r, ji in enumerate(lanes):
+                        mems[r, :lengths[ji]] = jobs[ji].mem
+                    viol[g] = first_violation_packed(
+                        starts[g], peaks[g], mems, lengths[g], dtv)
+                # NOTE: the admission state keeps each lane's OLD plan
+                # until that lane's kill event is processed below — while
+                # an OOMing job is still resident, the node's residual
+                # must be computed against the envelope it was admitted
+                # with, not the staged re-plan.
+            retryable = set(retry_set)
+
+            # Process the batch one event at a time — identical admission
+            # interleaving to the per-event loop.
+            for (t_, _, kind, ni, ji) in batch:
+                adm.release(ni, ji)
+                if kind == "done":
+                    wasted[ji] += (w_done[ji] - summem[ji]) * dts[ji]
+                    area_used += summem[ji] * dts[ji]
+                    done_at = max(done_at, t_)
+                else:  # OOM kill
+                    wasted[ji] += w_oom[ji] * dts[ji]
+                    attempts[ji] += 1
+                    retries += 1
+                    if ji in retryable:
+                        # The lane left its node: its staged re-plan may
+                        # now become visible to admission.
+                        adm.update_lane(ji, starts[ji], peaks[ji],
+                                        need[ji])
+                        queue.append(ji)
+                    else:
+                        unschedulable += 1
+                try_admit(t_)
 
         if write_back:
             for i, job in enumerate(jobs):

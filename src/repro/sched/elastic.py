@@ -6,14 +6,22 @@ data plane restartable under churn:
 * :func:`plan_mesh` — best (data, model) factorization for a surviving
   device count, honoring divisibility of the model's sharded dims.
 * :class:`ElasticPlanner` — admission control for concurrent jobs using
-  their KS+ memory envelopes (host- or HBM-side).  It shares the packed
-  admission primitive with :class:`repro.sched.cluster.ClusterSim`: slice
-  residual head-room is one vectorized
-  :func:`repro.core.envelope.usage_over` evaluation over the slice's packed
-  job envelopes, not a per-job Python loop.  ``node_leave`` evicts the
-  victim slice's jobs into a checkpoint/requeue list, ``node_join`` (and
+  their KS+ memory envelopes (host- or HBM-side).  It shares *runtime
+  state* with :class:`repro.sched.cluster.ClusterSim`'s fused engine, not
+  just the primitive: every decision — ``admit``, ``submit``, and the
+  churn-driven ``drain`` — reads the same
+  :class:`repro.sched.admission.AdmissionState` fits matrix under the same
+  invalidation protocol (time advance, place, release, plan change, node
+  join/leave).  Admission is the pointwise fits-under-residual check over
+  the slice's packed resident envelopes — a multi-segment envelope can be
+  admitted into head-room that only exists *over time* — with the slice
+  residual evaluated conservatively (resident envelopes count forever:
+  ``usage_over`` with ``dur=None``), and ties broken toward the slice with
+  the most post-placement head-room, matching the historical behavior for
+  flat envelopes.  ``node_leave`` evicts the victim slice's jobs into a
+  checkpoint/requeue list, ``node_join`` (and
   :meth:`ElasticPlanner.drain`) re-admits queued jobs through the same
-  packed check.
+  fits columns.
 
 Together with the deterministic data pipeline (batches are a pure function
 of ``(seed, step, shard)``) and atomic checkpoints, a re-shard is: drain →
@@ -28,7 +36,13 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import AllocationPlan
-from repro.core.envelope import PackedEnvelopes, usage_over
+from repro.core.envelope import (
+    PAD_START,
+    PackedEnvelopes,
+    alloc_at_packed,
+    usage_over,
+)
+from repro.sched.admission import AdmissionState
 
 __all__ = ["plan_mesh", "ElasticPlanner"]
 
@@ -47,19 +61,31 @@ def plan_mesh(n_devices: int, model_divisors: Tuple[int, ...],
     return best
 
 
+HORIZON_S = 600.0
+HORIZON_GRID = 32
+
+
 @dataclasses.dataclass
 class _Slice:
+    """Public per-slice view (resident jobs, introspection helpers).
+
+    Admission *decisions* do not run through this object — they read the
+    planner's shared :class:`AdmissionState` fits matrix; ``headroom`` is
+    kept as a standalone float64 view for monitoring/inspection (on the
+    same default horizon grid the admission state uses).
+    """
+
     name: str
     memory_gb: float
     jobs: List[Tuple[str, AllocationPlan, float]] = dataclasses.field(
         default_factory=list)  # (job id, envelope, started_at)
 
-    def headroom(self, now: float, horizon_s: float = 600.0) -> float:
+    def headroom(self, now: float, horizon_s: float = HORIZON_S) -> float:
         """Worst-case free memory over the horizon — packed evaluation of
-        every resident envelope at once (shared with the cluster sim)."""
+        every resident envelope at once."""
         if not self.jobs:
             return float(self.memory_gb)
-        grid = now + np.linspace(0, horizon_s, 32)
+        grid = now + np.linspace(0, horizon_s, HORIZON_GRID)
         env = PackedEnvelopes.from_plans([p for _, p, _ in self.jobs])
         t0 = np.asarray([t for _, _, t in self.jobs], np.float64)
         used = usage_over(env.starts, env.peaks, t0, grid)
@@ -70,16 +96,28 @@ class ElasticPlanner:
     """Envelope-aware admission control under node churn.
 
     Jobs that cannot be placed (yet) wait in ``pending`` in submission
-    order; every membership change re-runs the packed admission check over
-    the queue.  ``node_leave`` returns the job ids that must checkpoint —
-    they are simultaneously requeued, so the next ``node_join``/``drain``
-    re-admits them automatically (the re-shard decision is: evicted job →
-    checkpoint → requeue → restore wherever it fits next).
+    order; every membership change re-runs the shared fits-matrix check
+    over the queue.  ``node_leave`` returns the job ids that must
+    checkpoint — they are simultaneously requeued, so the next
+    ``node_join``/``drain`` re-admits them automatically (the re-shard
+    decision is: evicted job → checkpoint → requeue → restore wherever it
+    fits next).
+
+    ``backend="numpy"`` (default) runs the shared admission state on the
+    float64 host path; ``backend="fused"`` runs the same protocol with the
+    jitted one-dispatch-per-refresh columns (identical decisions — see the
+    precision contract in :mod:`repro.sched.admission`).
     """
 
-    def __init__(self):
+    def __init__(self, backend: str = "numpy"):
         self.slices: Dict[str, _Slice] = {}
         self.pending: List[Tuple[str, AllocationPlan]] = []
+        self._adm = AdmissionState(
+            [], K=1, G=HORIZON_GRID, backend=backend, use_dur=False)
+        self._names: List[str] = []  # slice name per AdmissionState row
+        self._grid = np.linspace(0.0, HORIZON_S, HORIZON_GRID)
+        self._lane: Dict[str, int] = {}  # job id -> lane index
+        self._free: List[int] = []       # recycled lanes of finished jobs
 
     # ------------------------------------------------------------ membership
     def node_join(self, name: str, memory_gb: float,
@@ -94,6 +132,8 @@ class ElasticPlanner:
         queued job placed by this join.
         """
         self.slices[name] = _Slice(name, memory_gb)
+        self._adm.add_node(memory_gb)
+        self._names.append(name)
         return self.drain(now) if now is not None else {}
 
     def node_leave(self, name: str, now: Optional[float] = None) -> List[str]:
@@ -104,6 +144,9 @@ class ElasticPlanner:
         immediately re-admitted wherever they fit on the surviving slices.
         """
         sl = self.slices.pop(name, None)
+        if sl is not None:
+            self._adm.remove_node(self._names.index(name))
+            self._names.remove(name)
         evicted = [(jid, plan) for jid, plan, _ in (sl.jobs if sl else [])]
         self.pending = evicted + self.pending
         if now is not None:
@@ -111,18 +154,62 @@ class ElasticPlanner:
         return [jid for jid, _ in evicted]
 
     # ------------------------------------------------------------- admission
+    def _ensure_lane(self, jid: str, envelope: AllocationPlan) -> int:
+        """Lane index for ``jid`` in the shared state (created on first
+        sight; resubmission with a changed envelope re-plans the lane)."""
+        n = len(envelope.starts)
+        self._adm.ensure_k(n)
+        K = self._adm.K
+        starts = np.full((K,), PAD_START, np.float64)
+        peaks = np.empty((K,), np.float64)
+        starts[:n] = envelope.starts
+        peaks[:n] = envelope.peaks
+        peaks[n:] = envelope.peaks[-1]
+        need = alloc_at_packed(starts[None], peaks[None], self._grid)[0]
+        lane = self._lane.get(jid)
+        if lane is None:
+            if self._free:  # recycle a finished job's lane: state stays
+                lane = self._free.pop()  # bounded by max *concurrent* jobs
+                self._adm.update_lane(lane, starts, peaks, need)
+            else:
+                lane = int(self._adm.add_lanes(
+                    starts[None], peaks[None], need[None],
+                    self._grid[None])[0])
+            self._lane[jid] = lane
+        elif not (np.array_equal(self._adm.starts[lane], starts)
+                  and np.array_equal(self._adm.peaks[lane], peaks)):
+            self._adm.update_lane(lane, starts, peaks, need)
+        return lane
+
     def admit(self, jid: str, envelope: AllocationPlan, now: float
               ) -> Optional[str]:
-        """Place a job on the slice with the most post-placement headroom."""
-        best, best_head = None, -np.inf
-        for sl in self.slices.values():
-            head = sl.headroom(now) - float(envelope.peaks.max())
-            if head > best_head:
-                best, best_head = sl, head
-        if best is None or best_head < 0:
+        """Place a job via the shared fits matrix.
+
+        Among the slices whose residual envelope covers the job's need
+        pointwise over the horizon, pick the one with the most
+        post-placement head-room (``minresid - peak``, first on ties —
+        identical to the historical scalar rule for flat envelopes).
+        """
+        if not self._names:
             return None
-        best.jobs.append((jid, envelope, now))
-        return best.name
+        lane = self._ensure_lane(jid, envelope)
+        for ni, name in enumerate(self._names):
+            if lane in self._adm.running[ni]:
+                # Already resident: this was a live re-size (the lane's
+                # reservation just changed in place), not a placement.
+                sl = self.slices[name]
+                sl.jobs = [(j, envelope if j == jid else p, t)
+                           for j, p, t in sl.jobs]
+                return name
+        col = self._adm.columns(now, [lane])[:, 0]  # (N,) fits
+        if not col.any():
+            return None
+        head = self._adm.minresid[:, lane] - float(envelope.peaks.max())
+        ni = int(np.argmax(np.where(col, head, -np.inf)))
+        self._adm.place(ni, lane, now)
+        name = self._names[ni]
+        self.slices[name].jobs.append((jid, envelope, now))
+        return name
 
     def submit(self, jid: str, envelope: AllocationPlan, now: float
                ) -> Optional[str]:
@@ -133,7 +220,14 @@ class ElasticPlanner:
         return placed
 
     def drain(self, now: float) -> Dict[str, str]:
-        """Re-run admission for every queued job, in queue order."""
+        """Re-run admission for every queued job, in queue order — each
+        decision reads the shared fits matrix, refreshed only where the
+        invalidation protocol says it is stale."""
+        lanes = [self._lane[j] for j, _ in self.pending if j in self._lane]
+        if lanes and self._names:
+            # One batched refresh for the whole queue up front; the per-job
+            # admissions below then only pay incremental invalidations.
+            self._adm.columns(now, lanes)
         placed: Dict[str, str] = {}
         still: List[Tuple[str, AllocationPlan]] = []
         for jid, envelope in self.pending:
@@ -150,6 +244,12 @@ class ElasticPlanner:
         return [jid for jid, _ in self.pending]
 
     def finish(self, jid: str):
-        for sl in self.slices.values():
-            sl.jobs = [(j, p, t) for j, p, t in sl.jobs if j != jid]
+        lane = self._lane.pop(jid, None)
+        for ni, name in enumerate(self._names):
+            sl = self.slices[name]
+            if any(j == jid for j, _, _ in sl.jobs):
+                sl.jobs = [(j, p, t) for j, p, t in sl.jobs if j != jid]
+                self._adm.release(ni, lane)
         self.pending = [(j, p) for j, p in self.pending if j != jid]
+        if lane is not None:
+            self._free.append(lane)

@@ -1,0 +1,365 @@
+"""Fused admission engine: differential + invalidation-protocol coverage.
+
+Three layers:
+
+* ``TestFusedDifferential`` — the fused ClusterSim engine must reproduce
+  the packed (host-side float64) engine's placement log bitwise, across
+  retry rules, unsatisfiable jobs, callable retries and offset sweeps.
+* ``TestAdmissionProtocol`` — unit coverage of the shared
+  :class:`AdmissionState` invalidation protocol (time advance, place,
+  release, plan change, node churn), with every refresh cross-checked
+  against a from-scratch float64 oracle: the fits matrix must never serve
+  a stale column.
+* ``TestChurnStorm`` — the high-churn shared-state scenario: ElasticPlanner
+  join/leave while a retry storm keeps re-planning lanes, on both
+  backends, every decision checked against the scratch oracle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationPlan, RetrySpec, ksplus_retry
+from repro.core.envelope import fits_column
+from repro.sched import ClusterSim, ElasticPlanner, Job, Node, OffsetCandidate
+from repro.sched.admission import AdmissionState
+
+from test_cluster_packed import _nodes, _workload
+
+
+def _assert_same(a, b):
+    assert a.placements == b.placements  # bitwise decision log
+    assert a.retries == b.retries
+    assert a.unschedulable == b.unschedulable
+    assert a.makespan == b.makespan
+    np.testing.assert_allclose(a.total_wastage_gbs, b.total_wastage_gbs,
+                               rtol=1e-12)
+
+
+class TestFusedDifferential:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_ksplus_matches_packed(self, seed):
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(48, seed=seed), RetrySpec("ksplus"))
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _workload(48, seed=seed), RetrySpec("ksplus"))
+        assert packed.retries > 0
+        _assert_same(fused, packed)
+
+    @pytest.mark.parametrize("kind", ["kseg-partial", "double",
+                                      "max-machine"])
+    def test_other_retry_rules_match(self, kind):
+        spec = RetrySpec(kind)
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(32, seed=5), spec)
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _workload(32, seed=5), spec)
+        _assert_same(fused, packed)
+
+    def test_retry_storm_matches_packed(self):
+        """Heavy-failure workload: most jobs under-allocated, so same-time
+        OOM batches and repeated re-plans dominate the event stream."""
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(64, seed=11, under_frac=0.8), RetrySpec("ksplus"))
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _workload(64, seed=11, under_frac=0.8), RetrySpec("ksplus"))
+        assert packed.retries >= 20
+        _assert_same(fused, packed)
+
+    def test_unsatisfiable_job_matches(self):
+        def build():
+            jobs = _workload(12, seed=7)
+            big = np.full(30, 200.0)
+            jobs.append(Job(jid=99, family="t", input_gb=1.0, mem=big,
+                            dt=1.0,
+                            plan=AllocationPlan(np.zeros(1),
+                                                np.asarray([8.0])),
+                            est_runtime=30.0))
+            return jobs
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            build(), RetrySpec("ksplus"))
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            build(), RetrySpec("ksplus"))
+        assert packed.unschedulable >= 1
+        _assert_same(fused, packed)
+
+    def test_callable_retry_matches(self):
+        def bump(plan, t_fail, used):
+            return plan.with_(peaks=np.maximum(plan.peaks * 2.0, used * 1.1))
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(24, seed=9), bump)
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _workload(24, seed=9), bump)
+        _assert_same(fused, packed)
+
+    def test_numpy_admission_backend_matches(self):
+        """Same protocol, host compute backend — pins the protocol itself
+        (batched events, incremental invalidation) independently of XLA."""
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(32, seed=2), RetrySpec("ksplus"))
+        sim = ClusterSim(_nodes(), engine="fused")
+        host = sim._run_fused(_workload(32, seed=2), RetrySpec("ksplus"),
+                              None, None, True, admission_backend="numpy")
+        _assert_same(host, packed)
+
+    def test_offset_sweep_on_fused_engine(self):
+        base = ClusterSim(_nodes(), engine="packed").run(
+            _workload(24, seed=4), RetrySpec("ksplus"))
+        swept = ClusterSim(_nodes(), engine="fused").run(
+            _workload(24, seed=4), RetrySpec("ksplus"),
+            offsets=[OffsetCandidate(), OffsetCandidate(peak=0.25)])
+        assert swept[0].placements == base.placements
+        assert swept[0].retries == base.retries
+        assert swept[1].retries <= swept[0].retries
+
+    def test_write_back_matches_packed(self):
+        jobs_p = _workload(24, seed=2)
+        jobs_f = _workload(24, seed=2)
+        ClusterSim(_nodes(), engine="packed").run(jobs_p, RetrySpec("ksplus"))
+        ClusterSim(_nodes(), engine="fused").run(jobs_f, RetrySpec("ksplus"))
+        for jp, jf in zip(jobs_p, jobs_f):
+            assert jp.attempts == jf.attempts
+            assert jp.wasted_gbs == jf.wasted_gbs
+            assert np.array_equal(jp.plan.starts, jf.plan.starts)
+            assert np.array_equal(jp.plan.peaks, jf.plan.peaks)
+
+    def test_fused_engine_rejects_preseeded_running(self):
+        jobs = _workload(4, seed=0)
+        nodes = _nodes()
+        nodes[1].running.append((0.0, jobs[0]))
+        with pytest.raises(ValueError, match="Node.running"):
+            ClusterSim(nodes, engine="fused").run(jobs[1:],
+                                                  RetrySpec("ksplus"))
+
+
+# --------------------------------------------------------------------------
+def _scratch_fits(adm: AdmissionState, now: float, lanes) -> np.ndarray:
+    """From-scratch float64 oracle for the fits matrix slice — recomputes
+    every (node, lane) entry directly from the current resident sets,
+    ignoring all cached state."""
+    lanes = np.asarray(lanes, np.int64)
+    out = np.zeros((adm.N, len(lanes)), bool)
+    for ni in range(adm.N):
+        run = adm.running[ni]
+        out[ni], _ = fits_column(
+            adm.caps[ni], adm.starts[run], adm.peaks[run],
+            adm.admit_t[run], adm.need[lanes], now + adm.grid[lanes],
+            dur=adm.dur[run] if adm.use_dur else None, tol=adm.tol)
+    return out
+
+
+def _mk_state(backend, caps=(32.0, 48.0), use_dur=True, K=3, G=16):
+    adm = AdmissionState(caps, K=K, G=G, backend=backend, use_dur=use_dur)
+    return adm
+
+
+def _mk_lanes(adm, rng, n):
+    from repro.core.envelope import PAD_START, alloc_at_packed
+    K, G = adm.K, adm.G
+    starts = np.full((n, K), PAD_START)
+    peaks = np.zeros((n, K))
+    grid = np.linspace(0.0, rng.uniform(30, 120, n), G, axis=1)
+    for i in range(n):
+        k = int(rng.integers(1, K + 1))
+        starts[i, :k] = np.sort(np.concatenate(
+            [[0.0], rng.uniform(1.0, 60.0, k - 1)]))
+        peaks[i, :k] = np.sort(rng.uniform(2.0, 20.0, k))
+        peaks[i, k:] = peaks[i, k - 1]
+    need = alloc_at_packed(starts, peaks, grid)
+    dur = rng.uniform(20.0, 100.0, n) if adm.use_dur else None
+    return adm.add_lanes(starts, peaks, need, grid, dur=dur)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "fused"])
+class TestAdmissionProtocol:
+    def test_refresh_matches_scratch_oracle(self, backend):
+        rng = np.random.default_rng(0)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 12)
+        got = adm.columns(0.0, lanes)
+        np.testing.assert_array_equal(got, _scratch_fits(adm, 0.0, lanes))
+
+    def test_place_invalidates_only_true_entries(self, backend):
+        rng = np.random.default_rng(1)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 10)
+        cols = adm.columns(0.0, lanes).copy()
+        ji = int(lanes[np.argmax(cols.any(axis=0))])
+        ni = int(np.argmax(cols[:, np.argmax(cols.any(axis=0))]))
+        adm.place(ni, ji, 0.0)
+        # False entries on the placed node stay valid (monotonicity) ...
+        false_lanes = lanes[~cols[ni, :]]
+        assert adm.valid[ni, false_lanes].all()
+        # ... True entries were invalidated,
+        true_lanes = lanes[cols[ni, :]]
+        assert not adm.valid[ni, true_lanes].any()
+        # and the next read is oracle-fresh either way.
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+
+    def test_release_invalidates_column(self, backend):
+        rng = np.random.default_rng(2)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 8)
+        cols = adm.columns(0.0, lanes)
+        ji = int(lanes[np.argmax(cols.any(axis=0))])
+        ni = int(np.argmax(cols[:, np.argmax(cols.any(axis=0))]))
+        adm.place(ni, ji, 0.0)
+        adm.columns(0.0, lanes)
+        adm.release(ni, ji)
+        assert not adm.valid[ni].any()
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+
+    def test_time_advance_invalidates_everything(self, backend):
+        rng = np.random.default_rng(3)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 8)
+        adm.columns(0.0, lanes)
+        assert adm.valid[:, lanes].all()
+        adm.sync_now(17.0)
+        assert not adm.valid.any()
+        np.testing.assert_array_equal(adm.columns(17.0, lanes),
+                                      _scratch_fits(adm, 17.0, lanes))
+
+    def test_plan_change_invalidates_lane_everywhere(self, backend):
+        from repro.core.envelope import alloc_at_packed
+        rng = np.random.default_rng(4)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 6)
+        adm.columns(0.0, lanes)
+        ji = int(lanes[0])
+        st = adm.starts[ji].copy()
+        pk = adm.peaks[ji] * 3.0
+        need = alloc_at_packed(st[None], pk[None], adm.grid[ji][None])[0]
+        adm.update_lane(ji, st, pk, need)
+        assert not adm.valid[:, ji].any()
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+
+    def test_resident_replan_invalidates_host_node_row(self, backend):
+        """Re-planning a lane that is currently resident changes its host
+        node's residual for *every* queued lane — the whole row must go
+        stale, not just the re-planned lane's column."""
+        from repro.core.envelope import alloc_at_packed
+        rng = np.random.default_rng(6)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 6)
+        cols = adm.columns(0.0, lanes)
+        ji = int(lanes[np.argmax(cols.any(axis=0))])
+        ni = int(np.argmax(cols[:, np.argmax(cols.any(axis=0))]))
+        adm.place(ni, ji, 0.0)
+        adm.columns(0.0, lanes)  # everything valid again
+        # live re-size of the *resident* lane: shrink its envelope
+        st = adm.starts[ji].copy()
+        pk = adm.peaks[ji] * 0.1
+        need = alloc_at_packed(st[None], pk[None], adm.grid[ji][None])[0]
+        adm.update_lane(ji, st, pk, need)
+        assert not adm.valid[ni].any()  # host node's whole row is stale
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+
+    def test_node_churn_keeps_matrix_fresh(self, backend):
+        rng = np.random.default_rng(5)
+        adm = _mk_state(backend)
+        lanes = _mk_lanes(adm, rng, 8)
+        adm.columns(0.0, lanes)
+        adm.add_node(24.0)
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+        evicted = adm.remove_node(0)
+        assert evicted == []
+        np.testing.assert_array_equal(adm.columns(0.0, lanes),
+                                      _scratch_fits(adm, 0.0, lanes))
+
+
+# --------------------------------------------------------------------------
+def _storm_env(rng, peak):
+    k = int(rng.integers(1, 4))
+    starts = np.sort(np.concatenate([[0.0], rng.uniform(5.0, 200.0, k - 1)]))
+    return AllocationPlan(starts=starts,
+                          peaks=np.sort(rng.uniform(peak / 2, peak, k)))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "fused"])
+class TestChurnStorm:
+    def test_planner_join_leave_during_retry_storm(self, backend):
+        """High-churn shared-state scenario: nodes join/leave while a
+        retry storm keeps re-planning queued jobs.  After every membership
+        or plan change, the shared fits matrix the planner reads must
+        match a from-scratch recompute — stale columns would either admit
+        into occupied memory or starve a fitting job."""
+        rng = np.random.default_rng(0)
+        pl = ElasticPlanner(backend=backend)
+        adm = pl._adm
+        now = 0.0
+        pl.node_join("n0", 48.0)
+        pl.node_join("n1", 32.0)
+        alive = ["n0", "n1"]
+        nxt = 2
+        log = []
+        for step in range(60):
+            now += float(rng.uniform(0.0, 5.0))
+            op = rng.uniform()
+            if op < 0.45:  # submit a new job
+                jid = f"j{step}"
+                log.append((jid, pl.submit(
+                    jid, _storm_env(rng, float(rng.uniform(6, 30))), now)))
+            elif op < 0.65 and pl.queued:  # retry storm: re-plan a waiter
+                jid = pl.pending[0][0]
+                new = _storm_env(rng, float(rng.uniform(6, 20)))
+                pl.pending[0] = (jid, new)
+                pl._ensure_lane(jid, new)  # plan change -> invalidation
+                pl.drain(now)
+            elif op < 0.85:  # join
+                name = f"x{nxt}"
+                nxt += 1
+                alive.append(name)
+                pl.node_join(name, float(rng.uniform(24, 64)), now=now)
+            elif len(alive) > 1:  # leave
+                victim = alive.pop(int(rng.integers(0, len(alive))))
+                pl.node_leave(victim, now=now)
+            # The invariant: every queued lane's fits column is fresh.
+            queued_lanes = [pl._lane[j] for j in pl.queued]
+            resident_lanes = [pl._lane[j] for sl in pl.slices.values()
+                              for j, _, _ in sl.jobs]
+            check = queued_lanes + resident_lanes
+            if check and adm.N:
+                np.testing.assert_array_equal(
+                    adm.columns(now, check),
+                    _scratch_fits(adm, now, check),
+                    err_msg=f"stale fits column at step {step}")
+        # the storm must actually have exercised placements and queueing
+        assert any(p is not None for _, p in log)
+        assert any(p is None for _, p in log)
+
+    def test_resident_resize_frees_headroom_for_waiters(self, backend):
+        """The reviewed starvation case: resubmitting a *running* job with
+        a smaller envelope must not re-place it, must free its slice's
+        head-room for waiters, and must not leak a phantom resident."""
+        pl = ElasticPlanner(backend=backend)
+        pl.node_join("n0", 32.0)
+        big = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([20.0]))
+        small = AllocationPlan(starts=np.zeros(1), peaks=np.asarray([5.0]))
+        assert pl.submit("A", big, now=0.0) == "n0"
+        assert pl.submit("B", big, now=0.0) is None  # 20+20 > 32: queued
+        # live re-size of resident A: same slice, no double placement
+        assert pl.submit("A", small, now=1.0) == "n0"
+        assert pl._adm.running[0].count(pl._lane["A"]) == 1
+        assert [j for j, _, _ in pl.slices["n0"].jobs] == ["A"]
+        # B now fits beside the shrunk A (5 + 20 <= 32)
+        assert pl.drain(now=1.0) == {"B": "n0"}
+        pl.finish("A")
+        assert pl._adm.running[0] == [pl._lane["B"]]
+
+    def test_cluster_retry_storm_stays_pinned(self, backend):
+        """ClusterSim under a retry storm on the same shared-state class:
+        the packed host engine is the oracle — any stale fits column in
+        the fused path would desynchronize the placement log."""
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _workload(40, seed=13, under_frac=0.7), RetrySpec("ksplus"))
+        sim = ClusterSim(_nodes(), engine="fused")
+        fused = sim._run_fused(
+            _workload(40, seed=13, under_frac=0.7), RetrySpec("ksplus"),
+            None, None, True, admission_backend=backend)
+        assert packed.retries >= 10
+        _assert_same(fused, packed)

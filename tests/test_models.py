@@ -150,7 +150,19 @@ def test_mamba_chunk_invariance():
 
 
 def test_scan_vs_unroll_equivalence():
-    """scan_layers=False must produce identical losses (dry-run validity)."""
+    """scan_layers=False must produce equivalent losses (dry-run validity).
+
+    Not bitwise: the residual stream is bfloat16, and XLA rounds
+    intermediates at different fusion boundaries in the scan-compiled body
+    vs the inlined unroll.  Matmul/attention accumulation is already
+    float32 (``preferred_element_type``, f32 online-softmax state), so the
+    remaining divergence is one bf16 ulp per layer injected into the
+    carry: measured, a single block already differs by 2^-12 absolute
+    (~2.4e-4 at unit hidden-state scale) and the end-to-end loss drifts by
+    ~1.2e-5 relative.  rtol=1e-4 keeps ~8x margin over that measured
+    drift while still catching any semantic divergence, which would shift
+    the loss by far more than 1e-4.
+    """
     cfg = smoke_config("llama3-8b")
     rng = np.random.default_rng(6)
     batch = _batch(cfg, rng)
@@ -158,4 +170,4 @@ def test_scan_vs_unroll_equivalence():
     l1, _ = forward_train(params, cfg, batch)
     cfg_u = dataclasses.replace(cfg, scan_layers=False)
     l2, _ = forward_train(params, cfg_u, batch)
-    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)

@@ -13,11 +13,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.launch.partitioning import mesh_context, default_rules
+from repro.launch.partitioning import auto_axis_types, mesh_context, default_rules
 from repro.models.moe import moe_block, moe_block_local
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 2), ("data", "model"), **auto_axis_types(2))
 rng = np.random.default_rng(7)
 d, E, ff = 32, 8, 64
 x = np.asarray(rng.standard_normal((8, 16, d)), np.float32)
