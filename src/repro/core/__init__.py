@@ -20,12 +20,15 @@ from repro.core.baselines import (
     DefaultMethod,
     KSegments,
     PPMImproved,
+    TovarFeedback,
     TovarPPM,
     WittPercentile,
 )
 from repro.core.envelope import (
+    OffsetCandidate,
     PackedEnvelopes,
     alloc_at_packed,
+    apply_offsets,
     first_violation_packed,
     fits_under,
     residual_over,
@@ -49,16 +52,24 @@ from repro.core.fleet import (
     packed_predict,
     simulate_fleet,
     simulate_fleet_many,
+    subset_batch,
 )
-from repro.core.ksplus import KSPlus, KSPlusAuto, MemoryPredictor
+from repro.core.ksplus import KSPlus, KSPlusAuto
 from repro.core.predictor import (
+    ExecutionOutcome,
     LinReg,
+    MemoryPredictor,
+    RefitPolicy,
     SegmentModel,
     fit_linreg,
     fit_segment_model,
     predict_plan,
     predict_runtime,
+    refit_batched,
+    segment_rows,
+    solve_segment_model,
 )
+from repro.core import registry
 from repro.core.retry import (
     double_retry,
     ksegments_partial_retry,
@@ -77,17 +88,20 @@ from repro.core.wastage import (
 
 __all__ = [
     "AllocationPlan", "alloc_at", "alloc_series", "first_violation",
-    "DefaultMethod", "KSegments", "PPMImproved", "TovarPPM", "WittPercentile",
-    "PackedEnvelopes", "alloc_at_packed", "first_violation_packed",
+    "DefaultMethod", "KSegments", "PPMImproved", "TovarFeedback", "TovarPPM",
+    "WittPercentile",
+    "OffsetCandidate", "PackedEnvelopes", "alloc_at_packed", "apply_offsets",
+    "first_violation_packed",
     "fits_under", "residual_over", "retry_packed", "segment_sample_bounds",
     "span_alloc_sum", "usage_over",
     "FleetBatch", "FleetResult", "PackedTraces", "RetrySpec", "TraceBucket",
     "bucket_traces", "concat_packed", "first_attempt", "fleet_eval",
     "pack_plans", "pack_traces", "packed_predict", "simulate_fleet",
-    "simulate_fleet_many",
-    "KSPlus", "KSPlusAuto", "MemoryPredictor",
+    "simulate_fleet_many", "subset_batch",
+    "ExecutionOutcome", "KSPlus", "KSPlusAuto", "MemoryPredictor",
+    "RefitPolicy", "refit_batched", "registry",
     "LinReg", "SegmentModel", "fit_linreg", "fit_segment_model",
-    "predict_plan", "predict_runtime",
+    "predict_plan", "predict_runtime", "segment_rows", "solve_segment_model",
     "double_retry", "ksegments_partial_retry", "ksegments_selective_retry",
     "ksplus_retry", "max_machine_retry",
     "get_segments", "get_segments_ref", "segments_to_starts",

@@ -40,6 +40,8 @@ import numpy as np
 __all__ = [
     "PAD_START",
     "RetrySpec",
+    "OffsetCandidate",
+    "apply_offsets",
     "PackedEnvelopes",
     "alloc_at_packed",
     "first_violation_packed",
@@ -75,6 +77,46 @@ class RetrySpec(NamedTuple):
     kind: str
     bump: float = 0.20    # ksplus last-segment peak bump
     margin: float = 0.10  # k-segments offset margin
+
+
+@dataclasses.dataclass(frozen=True)
+class OffsetCandidate:
+    """One (peak, start, last_peak_bump) safety-offset assignment.
+
+    Applied *on top of* the offsets the plans already carry: segment peaks
+    are scaled by ``1 + peak``, starts by ``1 - start`` (then re-pinned and
+    made monotone, exactly like the predictor's own offsets), and ksplus
+    retries use ``last_peak_bump`` when given.  ``OffsetCandidate()`` is the
+    identity — it reproduces the un-swept run decision for decision.
+    """
+
+    peak: float = 0.0
+    start: float = 0.0
+    last_peak_bump: float | None = None
+
+
+def apply_offsets(starts: np.ndarray, peaks: np.ndarray, nseg: np.ndarray,
+                  cand: OffsetCandidate):
+    """Re-scale a packed plan batch under one offset candidate (O(BK)).
+
+    Elementwise scaling only — the plans' own shape (including the
+    non-monotone envelopes k-Segments emits) is preserved, so the identity
+    candidate reproduces the input plans exactly.  Per-lane candidates are
+    supported by passing ``(B,)``-shaped ``cand.peak`` / ``cand.start``
+    arrays.  Returns new ``(starts, peaks)`` float64 arrays.
+    """
+    starts = np.asarray(starts, np.float64)
+    peaks = np.asarray(peaks, np.float64)
+    B, K = starts.shape
+    real = np.arange(K)[None, :] < np.asarray(nseg).reshape(B, 1)
+    p_off = np.asarray(cand.peak, np.float64).reshape(-1, 1)
+    s_off = np.asarray(cand.start, np.float64).reshape(-1, 1)
+    st = np.where(real, starts * (1.0 - s_off), PAD_START)
+    st = np.maximum.accumulate(np.maximum(st, 0.0), axis=1)
+    st[:, 0] = 0.0
+    st = np.where(real, st, PAD_START)
+    pk = np.maximum(peaks * (1.0 + p_off), 1e-6)
+    return st, pk
 
 
 @dataclasses.dataclass(frozen=True)

@@ -49,6 +49,7 @@ __all__ = [
     "pack_traces",
     "pad_lane_axis",
     "bucket_traces",
+    "subset_batch",
     "fleet_eval",
     "first_attempt",
     "packed_predict",
@@ -252,6 +253,45 @@ def bucket_traces(mems: Sequence[np.ndarray], min_t: int = 128,
         idx = np.asarray(sorted(ids), np.int64)
         buckets.append(_make_bucket(idx, [mems[i] for i in idx], T))
     return FleetBatch(n=len(mems), buckets=tuple(buckets))
+
+
+def subset_batch(batch: FleetBatch, lanes) -> FleetBatch:
+    """Restrict a :class:`FleetBatch` to a lane subset, keeping bucket widths.
+
+    Every selected lane stays in (a copy of) its original bucket with the
+    original padded length ``T``, so all per-lane engine arithmetic —
+    probes, span sums, device-side trace reductions — is bit-identical to a
+    run over the full batch.  The online replay harness leans on this: its
+    round batches must reproduce the offline replay bitwise under
+    ``refit="never"``.  ``n`` and the buckets' ``idx`` keep the *original*
+    lane numbering, so full-batch plan/result arrays index unchanged.
+    """
+    want = {int(i) for i in np.asarray(lanes).ravel()}
+    buckets = []
+    for b in batch.buckets:
+        local = np.asarray(
+            [p for p, i in enumerate(b.idx) if int(i) in want], np.int64)
+        if local.size == 0:
+            continue
+        nb, T = int(local.size), b.mems.shape[1]
+        Bp = _bucket(nb)
+        pmems = np.zeros((Bp, T), np.float32)
+        pmems[:nb] = b.mems[local]
+        plen = np.zeros((Bp,), np.int32)
+        plen[:nb] = b.lengths[local]
+        # Slice (never recompute) the per-lane trace sums: the originals
+        # were reduced from the raw float64 traces, which the float32 host
+        # rows kept here cannot reproduce bit-for-bit.
+        summem = np.zeros((Bp,), np.float32)
+        summem[:nb] = np.asarray(b.dsummem)[local]
+        memsneg = np.where(
+            np.arange(T)[None, :] < plen[:, None], pmems, -np.inf
+        ).astype(np.float32)
+        buckets.append(TraceBucket(
+            idx=b.idx[local], mems=b.mems[local], lengths=b.lengths[local],
+            dmems=jnp.asarray(pmems), dmemsneg=jnp.asarray(memsneg),
+            dlengths=jnp.asarray(plen), dsummem=jnp.asarray(summem)))
+    return FleetBatch(n=batch.n, buckets=tuple(buckets))
 
 
 # --------------------------------------------------------------------- probe

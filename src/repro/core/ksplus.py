@@ -6,32 +6,41 @@ Usage::
     model.fit(mems, dts, inputs)          # historical executions of one task
     plan = model.predict(input_size)      # AllocationPlan (monotone step fn)
     plan = model.retry(plan, t_fail, used)  # §II-C failure handling
+    model.observe(ExecutionOutcome(...))  # feed a finished execution back
+    model.refit("on_failure")             # maybe re-fit from the history
 
-Every method (KS+ and the baselines in :mod:`repro.core.baselines`) follows
-this ``fit / predict / retry`` protocol, so the simulator and benchmark
-harness treat them uniformly.
+Every method (KS+ and the baselines in :mod:`repro.core.baselines`)
+subclasses :class:`repro.core.predictor.MemoryPredictor` — the explicit
+``fit / observe / refit / predict / retry`` lifecycle — so the simulator,
+the online replay harness and the benchmark suite treat them uniformly.
+Construction and naming run through :mod:`repro.core.registry`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional, Protocol, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.allocation import AllocationPlan
 from repro.core.fleet import RetrySpec
 from repro.core.predictor import (
+    ExecutionOutcome,
+    MemoryPredictor,
+    RefitPolicy,
     SegmentModel,
-    fit_segment_model,
     predict_plan,
     predict_plans_packed,
     predict_runtime,
+    segment_rows,
+    solve_segment_model,
 )
 from repro.core.retry import ksplus_retry
 
-__all__ = ["MemoryPredictor", "KSPlus", "KSPlusAuto"]
+__all__ = ["ExecutionOutcome", "MemoryPredictor", "RefitPolicy",
+           "KSPlus", "KSPlusAuto"]
 
 
 def _resample_trace(mem: np.ndarray, dt: float, dt0: float) -> np.ndarray:
@@ -49,30 +58,8 @@ def _resample_trace(mem: np.ndarray, dt: float, dt0: float) -> np.ndarray:
     return np.asarray(mem)[idx]
 
 
-class MemoryPredictor(Protocol):
-    """fit/predict/retry protocol shared by KS+ and all baselines.
-
-    ``retry_spec`` is the static, batchable description of ``retry`` used by
-    the fleet engine (:mod:`repro.core.fleet`); ``retry`` itself remains the
-    per-plan oracle.
-    """
-
-    name: str
-
-    def fit(self, mems: Sequence[np.ndarray], dts: Sequence[float],
-            inputs: Sequence[float]) -> None: ...
-
-    def predict(self, input_size: float) -> AllocationPlan: ...
-
-    def retry(self, plan: AllocationPlan, t_fail: float,
-              used: float) -> AllocationPlan: ...
-
-    @property
-    def retry_spec(self) -> RetrySpec: ...
-
-
 @dataclasses.dataclass
-class KSPlus:
+class KSPlus(MemoryPredictor):
     """The KS+ method (dynamic segments + per-segment regression + re-timing).
 
     Attributes:
@@ -86,14 +73,53 @@ class KSPlus:
     peak_offset: float = 0.10
     start_offset: float = 0.15
     last_peak_bump: float = 0.20
-    name: str = "ks+"
     _model: Optional[SegmentModel] = dataclasses.field(default=None, repr=False)
+    # Cached per-execution segmentation rows (starts_sec, peaks, runtimes,
+    # inputs) for the fitted history — the incremental state online refits
+    # extend instead of re-segmenting everything.
+    _rows: Optional[tuple] = dataclasses.field(default=None, repr=False)
 
-    def fit(self, mems, dts, inputs) -> None:
-        self._model = fit_segment_model(
-            mems, dts, inputs, self.k,
+    def _fit(self, mems, dts, inputs) -> None:
+        ss, pk, rt = segment_rows(mems, dts, self.k)
+        self._rows = (ss, pk, rt, np.asarray(inputs, np.float64))
+        self._solve()
+
+    def _solve(self) -> None:
+        ss, pk, rt, I = self._rows
+        self._model = solve_segment_model(
+            I, ss, pk, rt, self.k,
             peak_offset=self.peak_offset, start_offset=self.start_offset,
         )
+
+    def _segment_tail(self):
+        st = self._life
+        have = 0 if self._rows is None else len(self._rows[3])
+        if self._rows is None or have > len(st.mems):
+            return None  # cache diverged from history: full refit
+        return st.mems[have:], st.dts[have:], self.k
+
+    def _commit_tail_rows(self, ss, pk, rt) -> None:
+        st = self._life
+        have = len(self._rows[3])
+        I2 = np.asarray(st.inputs[have:], np.float64)
+        self._rows = tuple(
+            np.concatenate([a, b])
+            for a, b in zip(self._rows, (ss, pk, rt, I2)))
+        self._solve()
+
+    def _refit(self) -> None:
+        """Incremental online refit: Algorithm 1 is per-execution, so only
+        the newly observed tail is segmented; the regressions re-solve over
+        the cached rows — bit-identical to a from-scratch ``_fit`` on the
+        full history, at O(new executions) cost."""
+        tail = self._segment_tail()
+        if tail is None:
+            return super()._refit()
+        mems, dts, k = tail
+        if mems:
+            self._commit_tail_rows(*segment_rows(mems, dts, k))
+        else:
+            self._solve()
 
     @property
     def model(self) -> SegmentModel:
@@ -122,7 +148,7 @@ class KSPlus:
 
 
 @dataclasses.dataclass
-class KSPlusAuto:
+class KSPlusAuto(MemoryPredictor):
     """KS+ with per-task automatic segment-count selection.
 
     The paper's stated future work ("dynamically determine the optimal
@@ -158,11 +184,10 @@ class KSPlusAuto:
     machine_memory: float = 128.0
     engine: str = "fleet"
     hetero_dt: str = "resample"
-    name: str = "ks+auto"
     chosen_k: Optional[int] = None
     _model: Optional[KSPlus] = dataclasses.field(default=None, repr=False)
 
-    def fit(self, mems, dts, inputs) -> None:
+    def _fit(self, mems, dts, inputs) -> None:
         if self.hetero_dt not in ("resample", "oracle"):
             raise ValueError(
                 f"unknown hetero_dt policy: {self.hetero_dt!r} "
@@ -230,6 +255,35 @@ class KSPlusAuto:
                 total += res.wastage_gbs
             totals.append(total)
         return totals
+
+    def observe(self, outcome: ExecutionOutcome) -> None:
+        super().observe(outcome)
+        if self._model is not None:  # mirror into the selected model's
+            self._model.observe(outcome)  # incremental lifecycle state
+
+    def _segment_tail(self):
+        # Batched-refit protocol: delegate to the selected model (its
+        # lifecycle mirrors this one's via `observe`).
+        return None if self._model is None else self._model._segment_tail()
+
+    def _commit_tail_rows(self, ss, pk, rt) -> None:
+        self._model._commit_tail_rows(ss, pk, rt)
+        self._model._life.pending = 0
+        self._model._life.failures = 0
+
+    def _refit(self) -> None:
+        """Online refit: re-estimate the regressions at the *selected* k
+        (incrementally, through the inner model's own lifecycle).
+
+        Re-running the |candidates|× training-replay sweep on every online
+        refit would dominate streaming replays (it is a full fleet
+        simulation of the whole history per candidate); the segment count
+        is a structural property of the task family, so it is re-selected
+        only by an explicit :meth:`fit`.
+        """
+        if self._model is None:  # never fitted: fall back to full selection
+            return super()._refit()
+        self._model.refit(RefitPolicy("every_n", 1))
 
     @property
     def model(self) -> KSPlus:

@@ -22,7 +22,7 @@ reformulation of the paper's per-task sklearn loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,13 +32,269 @@ from repro.core.allocation import AllocationPlan
 from repro.core.segmentation import get_segments
 
 __all__ = [
+    "ExecutionOutcome",
+    "RefitPolicy",
+    "MemoryPredictor",
+    "refit_batched",
     "LinReg",
     "fit_linreg",
     "SegmentModel",
+    "segment_rows",
+    "solve_segment_model",
     "fit_segment_model",
     "predict_plan",
     "predict_plans_packed",
 ]
+
+
+# ------------------------------------------------------------- lifecycle API
+@dataclasses.dataclass(frozen=True)
+class ExecutionOutcome:
+    """One finished execution, as fed back into a predictor's online state.
+
+    ``mem`` is the monitoring trace of the execution (GB per ``dt`` sample),
+    ``succeeded`` whether the *replay* of that execution under the method's
+    plans eventually succeeded (False = it exhausted its attempts or the
+    machine), ``retries`` how many attempts were OOM-killed on the way, and
+    ``peak_used`` the highest observed usage — defaulted from the trace
+    when omitted.
+    """
+
+    mem: np.ndarray
+    dt: float
+    input_gb: float
+    succeeded: bool = True
+    retries: int = 0
+    peak_used: Optional[float] = None
+
+    @property
+    def oomed(self) -> bool:
+        """Did the OOM killer fire at least once (even if a retry then
+        succeeded)?  This is the failure signal ``refit="on_failure"``
+        triggers on — a method whose retry rule always rescues the
+        execution would otherwise never see its own misses."""
+        return self.retries > 0 or not self.succeeded
+
+    @property
+    def peak(self) -> float:
+        if self.peak_used is not None:
+            return float(self.peak_used)
+        return float(np.max(self.mem))
+
+    @property
+    def runtime(self) -> float:
+        return len(self.mem) * float(self.dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class RefitPolicy:
+    """When :meth:`MemoryPredictor.refit` actually re-fits.
+
+    * ``"never"``      — today's offline behaviour: fit once, replay many.
+    * ``"every_n"``    — re-fit once ``n`` new outcomes have been observed.
+    * ``"on_failure"`` — re-fit as soon as an observed outcome failed.
+
+    Accepts the string forms ``"never"``, ``"on_failure"``, ``"every_n"``
+    (n defaults to 1) and ``"every_<n>"`` (e.g. ``"every_5"``) via
+    :meth:`parse`.  Hashable on purpose — policies ride through the
+    experiment harness as static configuration.
+    """
+
+    kind: str
+    n: int = 1
+
+    _KINDS = ("never", "every_n", "on_failure")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(
+                f"unknown refit policy: {self.kind!r} "
+                f"(expected one of {self._KINDS})")
+        if self.kind == "every_n" and self.n < 1:
+            raise ValueError(f"every_n needs n >= 1, got {self.n}")
+
+    @classmethod
+    def parse(cls, policy: Union["RefitPolicy", str]) -> "RefitPolicy":
+        if isinstance(policy, cls):
+            return policy
+        if isinstance(policy, str) and policy.startswith("every_") \
+                and policy != "every_n":
+            return cls("every_n", int(policy[len("every_"):]))
+        return cls(str(policy))
+
+    def due(self, pending: int, failures: int) -> bool:
+        """Is a refit due after ``pending`` unconsumed observations of
+        which ``failures`` failed?"""
+        if self.kind == "never" or pending == 0:
+            return False
+        if self.kind == "on_failure":
+            return failures > 0
+        return pending >= self.n
+
+
+class _Lifecycle:
+    """Per-predictor online state: the observed history and refit counters."""
+
+    __slots__ = ("mems", "dts", "inputs", "pending", "failures", "observed")
+
+    def __init__(self):
+        self.mems: List[Optional[np.ndarray]] = []
+        self.dts: List[float] = []
+        self.inputs: List[float] = []
+        self.pending = 0    # outcomes observed since the last (re)fit
+        self.failures = 0   # of those, how many failed
+        self.observed = 0   # lifetime outcome count
+
+
+class MemoryPredictor:
+    """Explicit predictor lifecycle shared by KS+ and every baseline.
+
+    ``fit(mems, dts, inputs)`` (offline bootstrap) → ``observe(outcome)``
+    (feed one finished execution into the per-family online state) →
+    ``refit(policy)`` (maybe re-fit from the accumulated history) →
+    ``predict`` / ``predict_packed`` → ``retry`` / ``retry_spec``.
+
+    Subclasses implement :meth:`_fit` (estimation from raw history) plus
+    the prediction/retry surface; the base class owns the history
+    bookkeeping so ``refit`` policies behave identically across methods.
+    A subclass whose refit consumes summary state instead of raw traces
+    (e.g. :class:`repro.core.baselines.TovarFeedback`) sets
+    ``_needs_traces = False`` — observed traces are then dropped after the
+    summary update, keeping online state O(#executions), not O(samples) —
+    and overrides :meth:`_refit`.
+
+    ``name`` resolves through :mod:`repro.core.registry` — the registry is
+    the single source of method names (``k-segments-selective``,
+    ``witt-p95``, ... are derived there from instance parameters).
+    """
+
+    _needs_traces = True
+
+    @property
+    def _life(self) -> _Lifecycle:
+        st = self.__dict__.get("_lifecycle")
+        if st is None:
+            st = self.__dict__["_lifecycle"] = _Lifecycle()
+        return st
+
+    # ------------------------------------------------------------- estimation
+    def _fit(self, mems, dts, inputs) -> None:
+        raise NotImplementedError
+
+    def fit(self, mems, dts, inputs) -> None:
+        """Offline bootstrap: (re)seed the history and fit from it."""
+        st = self._life
+        st.mems = [np.asarray(m) for m in mems] if self._needs_traces \
+            else [None] * len(mems)
+        st.dts = [float(d) for d in dts]
+        st.inputs = [float(i) for i in inputs]
+        st.pending = 0
+        st.failures = 0
+        self._fit(mems, dts, inputs)
+
+    def observe(self, outcome: ExecutionOutcome) -> None:
+        """Feed one finished execution into the online state."""
+        st = self._life
+        st.mems.append(np.asarray(outcome.mem) if self._needs_traces
+                       else None)
+        st.dts.append(float(outcome.dt))
+        st.inputs.append(float(outcome.input_gb))
+        st.pending += 1
+        st.observed += 1
+        if outcome.oomed:
+            st.failures += 1
+
+    def refit(self, policy: Union[RefitPolicy, str] = "never") -> bool:
+        """Re-fit from the accumulated history when ``policy`` says so.
+
+        Returns True iff a refit happened; the pending/failure counters
+        reset either way only on refit, so ``every_n`` counts across calls.
+        """
+        st = self._life
+        if not RefitPolicy.parse(policy).due(st.pending, st.failures):
+            return False
+        self._refit()
+        st.pending = 0
+        st.failures = 0
+        return True
+
+    def _refit(self) -> None:
+        """Default refit: re-run :meth:`_fit` over the full history."""
+        st = self._life
+        self._fit(st.mems, st.dts, st.inputs)
+
+    # Batched-refit protocol (optional): methods whose refit segments a
+    # history *tail* (KS+-style) expose the tail so same-event-time refits
+    # across many task families compact into one segmentation dispatch.
+    def _segment_tail(self):
+        """``(tail_mems, tail_dts, k)`` of unconsumed observations, or
+        None when this method cannot take the batched path."""
+        return None
+
+    def _commit_tail_rows(self, starts_sec, peaks, runtimes) -> None:
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- inference
+    @property
+    def name(self) -> str:
+        from repro.core import registry  # deferred: registry imports methods
+        return registry.name_of(self)
+
+    def predict(self, input_size: float) -> AllocationPlan:
+        raise NotImplementedError
+
+    def retry(self, plan: AllocationPlan, t_fail: float,
+              used: float) -> AllocationPlan:
+        raise NotImplementedError
+
+    @property
+    def retry_spec(self):
+        raise NotImplementedError
+
+
+def refit_batched(methods: Sequence[MemoryPredictor],
+                  policy: Union[RefitPolicy, str]) -> List[bool]:
+    """Compacted same-event-time refits across many predictors.
+
+    Method-for-method equivalent to calling ``m.refit(policy)`` on each —
+    same due test, same rows, same solves — but every due method that
+    exposes a segmentation tail (:meth:`MemoryPredictor._segment_tail`)
+    has its tail segmented in ONE :func:`segment_rows` call per segment
+    count: the per-dispatch cost of Algorithm 1 (a scan over the trace
+    batch) amortizes over every task family refitting at this event time,
+    mirroring the cluster engine's event-batched retries.  Methods without
+    a tail fall back to their own ``_refit``.
+
+    Returns the per-method refit flags (True = refitted).
+    """
+    pol = RefitPolicy.parse(policy)
+    due = [m for m in methods
+           if pol.due(m._life.pending, m._life.failures)]
+    groups: dict = {}
+    fallback = []
+    for m in due:
+        tail = m._segment_tail()
+        if tail is None:
+            fallback.append(m)
+        else:
+            groups.setdefault(int(tail[2]), []).append((m, tail))
+    for k, items in groups.items():
+        all_mems = [t for _, (mems, _, _) in items for t in mems]
+        all_dts = [d for _, (_, dts, _) in items for d in dts]
+        ss, pk, rt = segment_rows(all_mems, all_dts, k)
+        off = 0
+        for m, (mems, _, _) in items:
+            n = len(mems)
+            m._commit_tail_rows(ss[off:off + n], pk[off:off + n],
+                                rt[off:off + n])
+            off += n
+    for m in fallback:
+        m._refit()
+    for m in due:
+        m._life.pending = 0
+        m._life.failures = 0
+    due_ids = {id(m) for m in due}
+    return [id(m) in due_ids for m in methods]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,30 +308,64 @@ class LinReg:
         return self.slope * x + self.intercept
 
 
-def _lstsq_1d(x: jnp.ndarray, y: jnp.ndarray):
-    """Closed-form univariate least squares; degenerate x -> mean predictor."""
-    xm = jnp.mean(x)
-    ym = jnp.mean(y)
-    var = jnp.mean((x - xm) ** 2)
-    cov = jnp.mean((x - xm) * (y - ym))
+def _lstsq_1d(x: jnp.ndarray, y: jnp.ndarray, w: jnp.ndarray):
+    """Closed-form weighted univariate least squares.
+
+    ``w`` is a 0/1 validity weight over observations — padded rows are
+    masked out of every sum (including through ``where``, so garbage or
+    non-finite values in padded slots cannot poison the fit).  Degenerate
+    x → mean predictor.  With all-ones weights and no padding this is
+    bit-identical to the unweighted formulation (multiplying by exactly
+    1.0 and dividing by the exact observation count).
+    """
+    x = jnp.where(w > 0, x, 0.0)
+    y = jnp.where(w > 0, y, 0.0)
+    sw = jnp.sum(w)
+    xm = jnp.sum(w * x) / sw
+    ym = jnp.sum(w * y) / sw
+    var = jnp.sum(w * (x - xm) ** 2) / sw
+    cov = jnp.sum(w * (x - xm) * (y - ym)) / sw
     slope = jnp.where(var > 1e-18, cov / jnp.maximum(var, 1e-18), 0.0)
     intercept = ym - slope * xm
     return slope, intercept
 
 
-# vmap over the segment axis: x is shared, y differs per segment.
-_fit_many = jax.jit(jax.vmap(_lstsq_1d, in_axes=(None, 1), out_axes=0))
+# vmap over the segment axis: x/w are shared, y differs per segment.
+_fit_many = jax.jit(jax.vmap(_lstsq_1d, in_axes=(None, 1, None), out_axes=0))
 
 
-def fit_linreg(x: np.ndarray, y: np.ndarray) -> LinReg:
-    """Fit y[:, j] ~ x for each column j (or a single vector y)."""
-    x = jnp.asarray(x, jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
-    y2 = jnp.atleast_2d(jnp.asarray(y, x.dtype))
-    if y2.shape[0] == x.shape[0]:
-        ycols = y2 if y2.ndim == 2 else y2[:, None]
-    else:
-        ycols = y2.T
-    slope, intercept = _fit_many(x, ycols)
+def pad_obs_axis(n: int, lo: int = 8) -> int:
+    """Bucketed observation count: the execution axis of every fitting
+    program is padded to a power of two so *online refits* — where the
+    history grows by a few executions at a time — reuse the already
+    compiled XLA programs instead of recompiling per history length."""
+    return max(lo, 1 << (n - 1).bit_length())
+
+
+def fit_linreg(x: np.ndarray, y: np.ndarray,
+               w: Optional[np.ndarray] = None) -> LinReg:
+    """Fit y[:, j] ~ x for each column j (or a single vector y).
+
+    ``w`` is an optional 0/1 observation weight (callers that pre-pad the
+    execution axis pass it); the observation axis is bucketed to a power
+    of two (zero-weighted padding) to bound jit recompiles across
+    growing-history refits.
+    """
+    dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    xh = np.asarray(x, np.float64)
+    n = xh.shape[0]
+    y2 = np.atleast_2d(np.asarray(y, np.float64))
+    ycols = y2 if y2.shape[0] == n and y2.ndim == 2 else y2.T
+    wh = np.ones((n,), np.float64) if w is None else np.asarray(w, np.float64)
+    np_ = pad_obs_axis(n)
+    if np_ != n:
+        pad = np_ - n
+        xh = np.concatenate([xh, np.zeros(pad)])
+        ycols = np.concatenate([ycols, np.zeros((pad, ycols.shape[1]))])
+        wh = np.concatenate([wh, np.zeros(pad)])
+    slope, intercept = _fit_many(jnp.asarray(xh, dtype),
+                                 jnp.asarray(ycols, dtype),
+                                 jnp.asarray(wh, dtype))
     slope = np.asarray(slope)
     intercept = np.asarray(intercept)
     if np.ndim(y) == 1:
@@ -111,6 +401,70 @@ def _segment_executions(mems: jnp.ndarray, lengths: jnp.ndarray, k: int):
     return starts, P
 
 
+def segment_rows(mems: Sequence[np.ndarray], dts: Sequence[float], k: int):
+    """Per-execution segmentation rows: ``(starts_sec, peaks, runtimes)``.
+
+    This is the *incremental unit* of segment-model fitting: an
+    execution's row is a pure function of its own trace (Algorithm 1 is
+    per-execution), so online refits segment only the newly observed tail
+    and re-solve the regressions over cached rows — O(new executions) per
+    refit instead of O(history).  Both padded axes are bucketed to powers
+    of two so repeated calls (across families, splits and growing-history
+    refits) reuse the same jitted segmentation program.
+
+    Returns float64 arrays of shapes (N, k), (N, k), (N,).
+    """
+    if not (len(mems) == len(dts)) or not mems:
+        raise ValueError("mems/dts must be equal-length and non-empty")
+    N = len(mems)
+    T = max(max(len(m) for m in mems), 64)
+    T = 1 << (T - 1).bit_length()
+    Np = pad_obs_axis(N)
+    padded = np.zeros((Np, T), np.float32)
+    lengths = np.ones((Np,), np.int32)  # dummy rows: 1-sample zero trace
+    for i, m in enumerate(mems):
+        padded[i, : len(m)] = m
+        lengths[i] = len(m)
+    starts_smp, peaks = _segment_executions(
+        jnp.asarray(padded), jnp.asarray(lengths), k
+    )
+    dts_arr = np.asarray(dts, np.float64)
+    starts_sec = np.asarray(starts_smp, np.float64)[:N] * dts_arr[:, None]
+    runtimes = lengths[:N].astype(np.float64) * dts_arr
+    return starts_sec, np.asarray(peaks, np.float64)[:N], runtimes
+
+
+def solve_segment_model(
+    inputs: Sequence[float],
+    starts_sec: np.ndarray,
+    peaks: np.ndarray,
+    runtimes: np.ndarray,
+    k: int,
+    *,
+    peak_offset: float = 0.10,
+    start_offset: float = 0.15,
+) -> SegmentModel:
+    """Solve the 2k+1 regressions over pre-segmented rows in ONE dispatch.
+
+    The vmap is per-column, so the solutions are bit-identical to separate
+    per-regression calls; :func:`fit_linreg` buckets the execution axis, so
+    the same jitted program serves every refit of a growing history.
+    """
+    I = np.asarray(inputs, np.float64)
+    ys = np.concatenate([starts_sec, peaks, runtimes[:, None]], axis=1)
+    reg = fit_linreg(I, ys)
+    return SegmentModel(
+        k=k,
+        start_reg=LinReg(slope=reg.slope[:k], intercept=reg.intercept[:k]),
+        peak_reg=LinReg(slope=reg.slope[k:2 * k],
+                        intercept=reg.intercept[k:2 * k]),
+        runtime_reg=LinReg(slope=reg.slope[2 * k],
+                           intercept=reg.intercept[2 * k]),
+        peak_offset=peak_offset,
+        start_offset=start_offset,
+    )
+
+
 def fit_segment_model(
     mems: Sequence[np.ndarray],
     dts: Sequence[float],
@@ -120,7 +474,8 @@ def fit_segment_model(
     peak_offset: float = 0.10,
     start_offset: float = 0.15,
 ) -> SegmentModel:
-    """Fit a :class:`SegmentModel` from raw execution traces.
+    """Fit a :class:`SegmentModel` from raw execution traces
+    (:func:`segment_rows` + :func:`solve_segment_model`).
 
     Args:
       mems:   per-execution memory traces (GB), possibly different lengths.
@@ -128,38 +483,12 @@ def fit_segment_model(
       inputs: per-execution aggregated input sizes (GB).
       k:      number of segments.
     """
-    if not (len(mems) == len(dts) == len(inputs)) or not mems:
-        raise ValueError("mems/dts/inputs must be equal-length and non-empty")
-    N = len(mems)
-    # Bucket the padded length to a power of two so repeated fits across
-    # families/splits reuse the same jitted segmentation program.
-    T = max(max(len(m) for m in mems), 64)
-    T = 1 << (T - 1).bit_length()
-    padded = np.zeros((N, T), np.float32)
-    lengths = np.zeros((N,), np.int32)
-    for i, m in enumerate(mems):
-        padded[i, : len(m)] = m
-        lengths[i] = len(m)
-
-    starts_smp, peaks = _segment_executions(
-        jnp.asarray(padded), jnp.asarray(lengths), k
-    )
-    dts_arr = np.asarray(dts, np.float64)
-    starts_sec = np.asarray(starts_smp, np.float64) * dts_arr[:, None]
-    runtimes = lengths.astype(np.float64) * dts_arr
-
-    I = np.asarray(inputs, np.float64)
-    start_reg = fit_linreg(I, starts_sec)
-    peak_reg = fit_linreg(I, np.asarray(peaks, np.float64))
-    runtime_reg = fit_linreg(I, runtimes)
-    return SegmentModel(
-        k=k,
-        start_reg=start_reg,
-        peak_reg=peak_reg,
-        runtime_reg=runtime_reg,
-        peak_offset=peak_offset,
-        start_offset=start_offset,
-    )
+    if len(mems) != len(inputs):
+        raise ValueError("mems/inputs must be equal-length")
+    ss, pk, rt = segment_rows(mems, dts, k)
+    return solve_segment_model(inputs, ss, pk, rt, k,
+                               peak_offset=peak_offset,
+                               start_offset=start_offset)
 
 
 def predict_plan(model: SegmentModel, input_size: float) -> AllocationPlan:

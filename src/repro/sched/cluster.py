@@ -74,9 +74,11 @@ import numpy as np
 from repro.core import AllocationPlan, alloc_at, first_violation
 from repro.core.envelope import (
     PAD_START,
+    OffsetCandidate,
     PackedEnvelopes,
     RetrySpec,
     alloc_at_packed,
+    apply_offsets,
     first_violation_packed,
     fits_under,
     residual_over,
@@ -132,22 +134,6 @@ class Node:
         return bool(np.all(need <= resid + 1e-9))
 
 
-@dataclasses.dataclass(frozen=True)
-class OffsetCandidate:
-    """One (peak, start, last_peak_bump) safety-offset assignment.
-
-    Applied *on top of* the offsets the plans already carry: segment peaks
-    are scaled by ``1 + peak``, starts by ``1 - start`` (then re-pinned and
-    made monotone, exactly like the predictor's own offsets), and ksplus
-    retries use ``last_peak_bump`` when given.  ``OffsetCandidate()`` is the
-    identity — it reproduces the un-swept run decision for decision.
-    """
-
-    peak: float = 0.0
-    start: float = 0.0
-    last_peak_bump: Optional[float] = None
-
-
 @dataclasses.dataclass
 class ClusterResult:
     makespan: float
@@ -162,11 +148,21 @@ class ClusterResult:
 
 
 def _as_spec(retry) -> Tuple[Optional[RetrySpec], Optional[RetryFn]]:
-    """Normalize a retry argument into (spec, callable) — exactly one set."""
+    """Normalize a retry argument into (spec, callable) — exactly one set.
+
+    Accepts a :class:`RetrySpec`, a RetrySpec kind string, a registered
+    method *name* (``"ks+"`` — resolved to that method's retry rule through
+    :mod:`repro.core.registry`), a fitted method instance (its
+    ``retry_spec`` is used), or a legacy ``(plan, t_fail, used)`` callable.
+    """
     if isinstance(retry, RetrySpec):
         return retry, None
     if isinstance(retry, str):
-        return RetrySpec(retry), None
+        from repro.core import registry
+        spec = registry.try_retry_spec(retry)
+        return (spec if spec is not None else RetrySpec(retry)), None
+    if hasattr(retry, "retry_spec"):  # a MemoryPredictor-like method object
+        return retry.retry_spec, None
     return None, retry
 
 
@@ -188,16 +184,24 @@ class ClusterSim:
 
     # ------------------------------------------------------------------ API
     def run(self, jobs: List[Job], retry,
-            offsets: Optional[Sequence[OffsetCandidate]] = None
+            offsets: Union[None, str, Dict[str, OffsetCandidate],
+                           Sequence[OffsetCandidate]] = None
             ) -> Union[ClusterResult, List[ClusterResult]]:
         """Replay ``jobs`` through the cluster; see the module docstring.
 
         Without ``offsets`` returns one :class:`ClusterResult` and mutates
         the ``Job`` objects (attempts / wasted_gbs / plan) like the legacy
-        loop always did.  With ``offsets`` returns one result per
-        :class:`OffsetCandidate` — jobs are *not* mutated; each candidate
-        replays the same workload with re-packed plans while the trace
-        batch (and its device copy) is shared across the sweep.
+        loop always did.  With a sequence of ``offsets`` returns one result
+        per :class:`OffsetCandidate` — jobs are *not* mutated; each
+        candidate replays the same workload with re-packed plans while the
+        trace batch (and its device copy) is shared across the sweep.
+
+        ``offsets="auto"`` sweeps the registry's default candidate grid
+        (:data:`repro.core.registry.DEFAULT_OFFSET_GRID`) and returns only
+        the lowest-wastage result; ``offsets={family: OffsetCandidate}``
+        applies *per-task-family* candidates (e.g. the output of
+        :func:`repro.core.registry.tune_offset` per family) in one replay —
+        families absent from the mapping run at identity.
         """
         if self.engine == "legacy":
             if offsets is not None:
@@ -207,9 +211,56 @@ class ClusterSim:
                    else self._run_packed)
         if offsets is None:
             return run_one(jobs, retry, None, None, write_back=True)
+        if isinstance(offsets, str):
+            if offsets != "auto":
+                raise ValueError(f"unknown offsets mode: {offsets!r}")
+            from repro.core.registry import DEFAULT_OFFSET_GRID
+            offsets = DEFAULT_OFFSET_GRID
+            shared = self._pack_shared(jobs)
+            sweep = [run_one(jobs, retry, cand, shared, write_back=False)
+                     for cand in offsets]
+            return min(sweep, key=lambda r: r.total_wastage_gbs)
+        if isinstance(offsets, dict):
+            cand = self._family_offsets(jobs, offsets)
+            return run_one(jobs, retry, cand, None, write_back=False)
         shared = self._pack_shared(jobs)
         return [run_one(jobs, retry, cand, shared, write_back=False)
                 for cand in offsets]
+
+    @staticmethod
+    def _family_offsets(jobs: List[Job],
+                        mapping: Dict[str, OffsetCandidate]
+                        ) -> OffsetCandidate:
+        """Fold a per-family candidate mapping into one per-lane candidate.
+
+        ``peak``/``start`` become per-lane arrays (identity for families
+        not in the mapping); a swept ``last_peak_bump`` is a *static* field
+        of the retry rule, so it must agree across every family that sets
+        one.
+        """
+        families = {job.family for job in jobs}
+        unknown = set(mapping) - families
+        if unknown:
+            raise ValueError(
+                f"offset mapping names unknown families: {sorted(unknown)} "
+                f"(workload families: {sorted(families)})")
+        peak = np.zeros((len(jobs),), np.float64)
+        start = np.zeros((len(jobs),), np.float64)
+        bumps = {c.last_peak_bump for c in mapping.values()
+                 if c.last_peak_bump is not None}
+        if len(bumps) > 1:
+            raise ValueError(
+                "per-family offsets with differing last_peak_bump values "
+                f"are not supported (got {sorted(bumps)}); the bump is a "
+                "static field of the retry rule")
+        for i, job in enumerate(jobs):
+            c = mapping.get(job.family)
+            if c is not None:
+                peak[i] = c.peak
+                start[i] = c.start
+        return OffsetCandidate(peak=peak, start=start,
+                               last_peak_bump=(bumps.pop() if bumps
+                                               else None))
 
     # ---------------------------------------------------------- legacy loop
     def _run_legacy(self, jobs: List[Job], retry) -> ClusterResult:
@@ -335,19 +386,10 @@ class ClusterSim:
 
     @staticmethod
     def _apply_offset(env: PackedEnvelopes, cand: OffsetCandidate):
-        """Re-pack the plan batch under one offset candidate (cheap: O(BK)).
-
-        Elementwise scaling only — the plans' own shape (including the
-        non-monotone envelopes k-Segments emits) is preserved, so the
-        identity candidate reproduces the base plans exactly.
-        """
-        real = np.arange(env.K)[None, :] < env.nseg[:, None]
-        st = np.where(real, env.starts * (1.0 - cand.start), PAD_START)
-        st = np.maximum.accumulate(np.maximum(st, 0.0), axis=1)
-        st[:, 0] = 0.0
-        st = np.where(real, st, PAD_START)
-        pk = np.maximum(env.peaks * (1.0 + cand.peak), 1e-6)
-        return st, pk
+        """Re-pack the plan batch under one offset candidate (cheap: O(BK));
+        see :func:`repro.core.envelope.apply_offsets` — scalar (sweep) and
+        per-lane (per-family mapping) candidates both land here."""
+        return apply_offsets(env.starts, env.peaks, env.nseg, cand)
 
     def _prep_packed(self, jobs: List[Job], retry,
                      offset: Optional[OffsetCandidate], shared):

@@ -154,6 +154,24 @@ class ElasticPlanner:
         return [jid for jid, _ in evicted]
 
     # ------------------------------------------------------------- admission
+    @staticmethod
+    def _as_plan(envelope, input_gb=None) -> AllocationPlan:
+        """Normalize the admission argument into an allocation envelope.
+
+        Accepts an :class:`AllocationPlan`, a fitted method instance, or a
+        registered method *name* (:mod:`repro.core.registry` — names
+        construct fresh instances, so they only work for fit-free methods
+        like ``"default"``); methods predict with ``input_gb``.
+        """
+        if isinstance(envelope, AllocationPlan):
+            return envelope
+        from repro.core import registry
+        method = registry.resolve(envelope)
+        if input_gb is None:
+            raise ValueError(
+                "admitting via a method (or registry name) needs input_gb")
+        return method.predict(float(input_gb))
+
     def _ensure_lane(self, jid: str, envelope: AllocationPlan) -> int:
         """Lane index for ``jid`` in the shared state (created on first
         sight; resubmission with a changed envelope re-plans the lane)."""
@@ -181,15 +199,18 @@ class ElasticPlanner:
             self._adm.update_lane(lane, starts, peaks, need)
         return lane
 
-    def admit(self, jid: str, envelope: AllocationPlan, now: float
-              ) -> Optional[str]:
+    def admit(self, jid: str, envelope, now: float, *,
+              input_gb: Optional[float] = None) -> Optional[str]:
         """Place a job via the shared fits matrix.
 
-        Among the slices whose residual envelope covers the job's need
-        pointwise over the horizon, pick the one with the most
-        post-placement head-room (``minresid - peak``, first on ties —
-        identical to the historical scalar rule for flat envelopes).
+        ``envelope`` is an :class:`AllocationPlan`, a fitted method, or a
+        registered method name (see :meth:`_as_plan`).  Among the slices
+        whose residual envelope covers the job's need pointwise over the
+        horizon, pick the one with the most post-placement head-room
+        (``minresid - peak``, first on ties — identical to the historical
+        scalar rule for flat envelopes).
         """
+        envelope = self._as_plan(envelope, input_gb)
         if not self._names:
             return None
         lane = self._ensure_lane(jid, envelope)
@@ -211,9 +232,10 @@ class ElasticPlanner:
         self.slices[name].jobs.append((jid, envelope, now))
         return name
 
-    def submit(self, jid: str, envelope: AllocationPlan, now: float
-               ) -> Optional[str]:
+    def submit(self, jid: str, envelope, now: float, *,
+               input_gb: Optional[float] = None) -> Optional[str]:
         """Admit now, or queue for the next membership change."""
+        envelope = self._as_plan(envelope, input_gb)
         placed = self.admit(jid, envelope, now)
         if placed is None:
             self.pending.append((jid, envelope))

@@ -1,4 +1,4 @@
-"""Trace-driven evaluation harness (paper §III).
+"""Trace-driven evaluation harness (paper §III) + online replay.
 
 Fits every method per task family on the training split, replays the test
 split through the OOM/retry simulator, and aggregates GB·s wastage —
@@ -10,32 +10,51 @@ per method and the whole OOM/retry protocol executes inside a single jitted
 XLA program, instead of ``families × executions × attempts`` Python-level
 numpy calls.  ``engine="oracle"`` keeps the original per-execution loop —
 it is the ground truth the engine is differentially tested against.
+
+``mode="online"`` streams the test split *in submission order* through the
+predictor lifecycle (:class:`repro.core.predictor.MemoryPredictor`):
+executions are grouped into rounds (the i-th ``round_size`` executions of
+every family share an event time), each round replays as one compacted
+fleet dispatch over a lane *subset* of the shared trace batch
+(:func:`repro.core.fleet.subset_batch` — bucket widths are preserved, so
+per-lane arithmetic stays bit-identical to the offline batch), and between
+rounds every online-capable method ``observe``s its outcomes and ``refit``s
+under the given policy — one compacted refit per (family, method) per event
+time, mirroring the cluster engine's event-batched retries.  With
+``refit="never"`` no model ever changes, so online replay reproduces the
+offline :class:`ExperimentResult` bitwise (differentially pinned in
+``tests/test_online.py``).
+
+The method zoo lives in :mod:`repro.core.registry` — method *names*
+(including aliases) are accepted everywhere method lists are, and each
+family's methods are constructed from the registry with the family's real
+``default_limit_gb``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import numpy as np
 
 from repro.core import (
-    DefaultMethod,
-    KSegments,
-    KSPlus,
-    KSPlusAuto,
-    PPMImproved,
-    TovarPPM,
-    WittPercentile,
+    ExecutionOutcome,
+    RefitPolicy,
     bucket_traces,
     concat_packed,
     packed_predict,
+    refit_batched,
+    registry,
     simulate_execution,
     simulate_fleet_many,
+    subset_batch,
 )
-from repro.traces.generator import Execution, Workflow
+from repro.core.fleet import PAD_START, FleetResult
+from repro.traces.generator import Workflow
 
-__all__ = ["MethodResult", "ExperimentResult", "default_methods", "evaluate_workflow"]
+__all__ = ["MethodResult", "ExperimentResult", "default_methods",
+           "evaluate_workflow", "run_paper_experiment"]
 
 
 @dataclasses.dataclass
@@ -63,37 +82,65 @@ class ExperimentResult:
 
 def default_methods(k: int, machine_memory: float,
                     default_limit: float) -> Dict[str, Callable[[], object]]:
-    """The paper's method zoo (§III-B) plus the Witt et al. percentile
-    baseline, freshly constructed per family."""
+    """Compatibility shim: the method zoo as per-name constructors.
+
+    The zoo itself lives in :mod:`repro.core.registry` now — prefer
+    ``registry.method_names()`` / ``registry.make(name, ...)``.
+    """
     return {
-        "ks+": lambda: KSPlus(k=k),
-        "ks+auto": lambda: KSPlusAuto(machine_memory=machine_memory),
-        "k-segments-selective": lambda: KSegments(k=k, variant="selective"),
-        "k-segments-partial": lambda: KSegments(k=k, variant="partial"),
-        "tovar-ppm": lambda: TovarPPM(machine_memory=machine_memory),
-        "ppm-improved": lambda: PPMImproved(machine_memory=machine_memory),
-        "witt-p95": lambda: WittPercentile(percentile=95.0,
-                                           machine_memory=machine_memory),
-        "default": lambda: DefaultMethod(limit_gb=default_limit,
-                                         machine_memory=machine_memory),
+        name: (lambda name=name: registry.make(
+            name, k=k, machine_memory=machine_memory,
+            default_limit=default_limit))
+        for name in registry.method_names()
     }
 
 
 def _fit_methods(wf: Workflow, train, names, k, machine_memory):
-    """Fit every method on every family's training split."""
+    """Construct (from the registry, with each family's real default
+    limit) and fit every method on every family's training split."""
     fitted: Dict[str, Dict[str, object]] = {}
     for fname, train_execs in train.items():
         fam = wf.families[fname]
-        zoo = default_methods(k, machine_memory, fam.default_limit_gb)
         mems = [e.mem for e in train_execs]
         dts = [e.dt for e in train_execs]
         inputs = [e.input_gb for e in train_execs]
         fitted[fname] = {}
         for mname in names:
-            method = zoo[mname]()
+            method = registry.make(mname, k=k, machine_memory=machine_memory,
+                                   default_limit=fam.default_limit_gb)
             method.fit(mems, dts, inputs)
             fitted[fname][mname] = method
     return fitted
+
+
+def _method_jobs(fitted, train, test, names):
+    """One packed-plan job per method over the whole flat test split,
+    family-major — the offline fleet batch."""
+    jobs = []
+    for mname in names:
+        parts = [
+            packed_predict(fitted[fname][mname],
+                           [e.input_gb for e in test[fname]])
+            for fname in train if test[fname]
+        ]
+        specs = {fitted[fname][mname].retry_spec for fname in train}
+        assert len(specs) == 1, f"{mname}: retry spec differs across families"
+        jobs.append((concat_packed(parts), specs.pop()))
+    return jobs
+
+
+def _aggregate_fleet(results, fleet, names, train, fam_idx):
+    """Fold per-lane fleet outcomes into MethodResults (shared by the
+    offline and online paths — identical reduction order, so the online
+    ``refit="never"`` replay matches offline bitwise)."""
+    for mname, fr in zip(names, fleet):
+        per_fam = np.zeros(len(train))
+        np.add.at(per_fam, fam_idx, fr.wastage_gbs)
+        for i, fname in enumerate(train):
+            results[mname].per_family_gbs[fname] = float(per_fam[i])
+        results[mname].total_gbs = float(fr.wastage_gbs.sum())
+        results[mname].retries = int(fr.retries.sum())
+        results[mname].failures = int((~fr.succeeded).sum())
 
 
 def evaluate_workflow(
@@ -106,6 +153,9 @@ def evaluate_workflow(
     methods: Optional[List[str]] = None,
     dt: float = 1.0,
     engine: str = "fleet",
+    mode: str = "offline",
+    refit: Union[RefitPolicy, str] = "never",
+    round_size: int = 1,
 ) -> ExperimentResult:
     """Fit + replay one (workflow, seed, train fraction) cell.
 
@@ -113,11 +163,26 @@ def evaluate_workflow(
     one jitted OOM/retry program per method over the *whole* test split;
     ``engine="oracle"`` replays execution-by-execution through
     :func:`simulate_execution`.
+
+    ``mode="online"`` (fleet engine only) streams the test split through
+    the predictor lifecycle: per round of ``round_size`` executions per
+    family, replay → ``observe`` → ``refit(refit)``.  Methods whose
+    registry spec says ``online=False`` (the frozen paper baselines) replay
+    with their fit-once models.  ``refit="never"`` reproduces the offline
+    result bitwise.
     """
     if engine not in ("fleet", "oracle"):
         raise ValueError(f"unknown engine: {engine!r}")
+    if mode not in ("offline", "online"):
+        raise ValueError(f"unknown mode: {mode!r}")
+    if mode == "online" and engine != "fleet":
+        raise ValueError("mode='online' requires engine='fleet'")
+    if round_size < 1:
+        raise ValueError(f"round_size must be >= 1, got {round_size}")
+    policy = RefitPolicy.parse(refit)
     train, test = wf.split(seed, train_frac, dt)
-    names = methods or list(default_methods(k, machine_memory, 8.0).keys())
+    names = [registry.canonical_name(m) for m in methods] if methods \
+        else registry.method_names()
     results: Dict[str, MethodResult] = {
         m: MethodResult(m, {}, 0.0, 0, 0) for m in names
     }
@@ -142,7 +207,7 @@ def evaluate_workflow(
         return ExperimentResult(wf.name, seed, train_frac, results)
 
     # Fleet path: flatten the whole test split into one lane batch, bucketed
-    # once and shared across methods; ALL methods replay in two dispatches.
+    # once and shared across methods (and, online, across rounds).
     flat = [(fname, e) for fname in train for e in test[fname]]
     for mname in names:
         for fname in train:
@@ -154,29 +219,100 @@ def evaluate_workflow(
     fam_idx = np.asarray(
         [list(train).index(fname) for fname, _ in flat], np.int64)
 
-    jobs = []
-    for mname in names:
-        # Vectorized per-family prediction, concatenated in flat-lane order.
-        parts = [
-            packed_predict(fitted[fname][mname],
-                           [e.input_gb for e in test[fname]])
-            for fname in train if test[fname]
-        ]
-        specs = {fitted[fname][mname].retry_spec for fname in train}
-        assert len(specs) == 1, f"{mname}: retry spec differs across families"
-        jobs.append((concat_packed(parts), specs.pop()))
-    fleet = simulate_fleet_many(
-        jobs, traces, flat[0][1].dt, machine_memory=machine_memory)
+    if mode == "offline":
+        jobs = _method_jobs(fitted, train, test, names)
+        fleet = simulate_fleet_many(
+            jobs, traces, flat[0][1].dt, machine_memory=machine_memory)
+        _aggregate_fleet(results, fleet, names, train, fam_idx)
+        return ExperimentResult(wf.name, seed, train_frac, results)
 
-    for mname, fr in zip(names, fleet):
-        per_fam = np.zeros(len(train))
-        np.add.at(per_fam, fam_idx, fr.wastage_gbs)
-        for i, fname in enumerate(train):
-            results[mname].per_family_gbs[fname] = float(per_fam[i])
-        results[mname].total_gbs = float(fr.wastage_gbs.sum())
-        results[mname].retries = int(fr.retries.sum())
-        results[mname].failures = int((~fr.succeeded).sum())
+    # Online replay: the i-th `round_size` executions of every family share
+    # an event time; ALL methods still replay each round in the usual two
+    # compacted dispatches, then observations and refits are batched per
+    # (family, method) at the round boundary.  Per-family packed
+    # predictions are cached and invalidated only by an actual refit, so a
+    # family whose model never changes predicts exactly once — with
+    # `refit="never"` the prediction work equals the offline replay's.
+    B = len(flat)
+    within = np.zeros((B,), np.int64)  # index within its family
+    seen: Dict[str, int] = {}
+    for i, (fname, _) in enumerate(flat):
+        within[i] = seen.get(fname, 0)
+        seen[fname] = within[i] + 1
+    n_rounds = int(within.max()) // round_size + 1
+    online = {m: registry.get_spec(m).online for m in names}
+    wastage = {m: np.zeros((B,), np.float64) for m in names}
+    attempts = {m: np.ones((B,), np.int64) for m in names}
+    succeeded = {m: np.zeros((B,), bool) for m in names}
+    pred_cache: Dict[tuple, tuple] = {}  # (family, method) -> packed plans
 
+    def family_plans(fname, mname):
+        sp = pred_cache.get((fname, mname))
+        if sp is None:
+            sp = pred_cache[(fname, mname)] = packed_predict(
+                fitted[fname][mname],
+                [e.input_gb for e in test[fname]])
+        return sp
+
+    for r in range(n_rounds):
+        lanes = np.nonzero(within // round_size == r)[0]
+        by_fam: Dict[str, list] = {}
+        for i in lanes:
+            fname, e = flat[i]
+            by_fam.setdefault(fname, []).append((int(i), e))
+        jobs = []
+        for mname in names:
+            parts = []
+            for fname in train:
+                pairs = by_fam.get(fname)
+                if not pairs:
+                    continue
+                sp = family_plans(fname, mname)
+                sub = within[[i for i, _ in pairs]]
+                parts.append((sp[0][sub], sp[1][sub], sp[2][sub]))
+            specs = {fitted[fname][mname].retry_spec for fname in train}
+            assert len(specs) == 1, \
+                f"{mname}: retry spec differs across families"
+            sp = concat_packed(parts)
+            K = sp[0].shape[1]
+            starts = np.full((B, K), PAD_START, np.float32)
+            peaks = np.ones((B, K), np.float32)
+            nseg = np.ones((B,), np.int32)
+            starts[lanes], peaks[lanes], nseg[lanes] = sp
+            jobs.append(((starts, peaks, nseg), specs.pop()))
+        fleet = simulate_fleet_many(
+            jobs, subset_batch(traces, lanes), flat[0][1].dt,
+            machine_memory=machine_memory)
+        for mname, fr in zip(names, fleet):
+            wastage[mname][lanes] = fr.wastage_gbs[lanes]
+            attempts[mname][lanes] = fr.attempts[lanes]
+            succeeded[mname][lanes] = fr.succeeded[lanes]
+        if policy.kind == "never" or r == n_rounds - 1:
+            # "never": no refit can ever consume the observations; final
+            # round: the refitted models would never predict again.
+            continue
+        keys = []
+        for mname in names:
+            if not online[mname]:
+                continue
+            for fname, pairs in by_fam.items():
+                method = fitted[fname][mname]
+                for i, e in pairs:
+                    method.observe(ExecutionOutcome(
+                        mem=e.mem, dt=e.dt, input_gb=e.input_gb,
+                        succeeded=bool(succeeded[mname][i]),
+                        retries=int(attempts[mname][i] - 1)))
+                keys.append((fname, mname))
+        # One compacted refit pass per event time: every due family's
+        # tail segments in one dispatch per segment count.
+        did = refit_batched([fitted[f][m] for f, m in keys], policy)
+        for (fname, mname), flag in zip(keys, did):
+            if flag:
+                pred_cache.pop((fname, mname), None)
+
+    fleet = [FleetResult(wastage_gbs=wastage[m], attempts=attempts[m],
+                         succeeded=succeeded[m]) for m in names]
+    _aggregate_fleet(results, fleet, names, train, fam_idx)
     return ExperimentResult(wf.name, seed, train_frac, results)
 
 
@@ -190,6 +326,9 @@ def run_paper_experiment(
     methods: Optional[List[str]] = None,
     dt: float = 1.0,
     engine: str = "fleet",
+    mode: str = "offline",
+    refit: Union[RefitPolicy, str] = "never",
+    round_size: int = 1,
 ):
     """Fig. 6 protocol: 10 seeds × {25, 50, 75}% training data, averaged."""
     out: Dict[float, Dict[str, float]] = {}
@@ -199,7 +338,7 @@ def run_paper_experiment(
             res = evaluate_workflow(
                 wf, seed=seed, train_frac=frac, k=k,
                 machine_memory=machine_memory, methods=methods, dt=dt,
-                engine=engine,
+                engine=engine, mode=mode, refit=refit, round_size=round_size,
             )
             for name, mr in res.methods.items():
                 acc.setdefault(name, []).append(mr.total_gbs)

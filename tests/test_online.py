@@ -1,0 +1,213 @@
+"""Online predictor lifecycle: observe/refit, online replay, tovar-feedback.
+
+The load-bearing checks:
+
+* online replay with ``refit="never"`` must reproduce the offline
+  :class:`ExperimentResult` **bitwise** on the fleet engine (same per-lane
+  arithmetic, same reduction order — see ``fleet.subset_batch``),
+* :class:`TovarFeedback`'s carried peak-distribution state must match a
+  from-scratch oracle refit on the concatenated history,
+* feedback must pay: ``tovar-feedback`` under ``refit="on_failure"``
+  strictly reduces total wastage vs the fit-once ``tovar-ppm`` on a seeded
+  workflow replay.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExecutionOutcome,
+    KSPlus,
+    RefitPolicy,
+    TovarFeedback,
+    TovarPPM,
+)
+from repro.sched import evaluate_workflow
+from repro.traces import eager, sarek
+
+
+def _traces(n=10, seed=0, lo=2.0, hi=6.0):
+    rng = np.random.default_rng(seed)
+    mems, dts, Is = [], [], []
+    for _ in range(n):
+        I = float(rng.uniform(1, 5))
+        L = int(20 + 6 * I)
+        m = np.concatenate([np.full(int(0.6 * L), lo),
+                            np.full(L - int(0.6 * L), hi + 0.3 * I)])
+        mems.append(m)
+        dts.append(1.0)
+        Is.append(I)
+    return mems, dts, Is
+
+
+class TestRefitPolicy:
+    def test_parse_forms(self):
+        assert RefitPolicy.parse("never") == RefitPolicy("never")
+        assert RefitPolicy.parse("on_failure") == RefitPolicy("on_failure")
+        assert RefitPolicy.parse("every_n") == RefitPolicy("every_n", 1)
+        assert RefitPolicy.parse("every_5") == RefitPolicy("every_n", 5)
+        p = RefitPolicy("every_n", 3)
+        assert RefitPolicy.parse(p) is p
+        with pytest.raises(ValueError):
+            RefitPolicy.parse("sometimes")
+        with pytest.raises(ValueError):
+            RefitPolicy("every_n", 0)
+
+    def test_due(self):
+        assert not RefitPolicy("never").due(10, 10)
+        assert RefitPolicy("every_n", 3).due(3, 0)
+        assert not RefitPolicy("every_n", 3).due(2, 0)
+        assert RefitPolicy("on_failure").due(1, 1)
+        assert not RefitPolicy("on_failure").due(5, 0)
+        assert not RefitPolicy("on_failure").due(0, 0)
+
+
+class TestLifecycle:
+    def test_outcome_defaults(self):
+        o = ExecutionOutcome(mem=np.asarray([1.0, 3.0]), dt=2.0, input_gb=1.0)
+        assert o.peak == 3.0 and o.runtime == 4.0
+        assert o.succeeded and not o.oomed
+        assert ExecutionOutcome(mem=o.mem, dt=1.0, input_gb=1.0,
+                                retries=2).oomed
+        assert ExecutionOutcome(mem=o.mem, dt=1.0, input_gb=1.0,
+                                succeeded=False).oomed
+        assert ExecutionOutcome(mem=o.mem, dt=1.0, input_gb=1.0,
+                                peak_used=9.0).peak == 9.0
+
+    def test_observe_refit_cycle(self):
+        mems, dts, Is = _traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        plan0 = m.predict(3.0)
+        m.observe(ExecutionOutcome(mem=np.full(40, 20.0), dt=1.0,
+                                   input_gb=3.0))
+        assert not m.refit("never")           # policy says no
+        np.testing.assert_array_equal(m.predict(3.0).peaks, plan0.peaks)
+        assert m.refit("every_n")             # consumes the observation
+        assert m.predict(3.0).peaks[-1] > plan0.peaks[-1]
+        assert not m.refit("every_n")         # nothing pending anymore
+
+    def test_on_failure_requires_oom(self):
+        mems, dts, Is = _traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        m.observe(ExecutionOutcome(mem=mems[0], dt=1.0, input_gb=Is[0]))
+        assert not m.refit("on_failure")
+        m.observe(ExecutionOutcome(mem=mems[0], dt=1.0, input_gb=Is[0],
+                                   retries=1))
+        assert m.refit("on_failure")
+
+    def test_fit_resets_history(self):
+        mems, dts, Is = _traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        m.observe(ExecutionOutcome(mem=mems[0], dt=1.0, input_gb=Is[0],
+                                   retries=1))
+        m.fit(mems, dts, Is)  # re-seeding clears pending/failures
+        assert not m.refit("on_failure")
+
+
+class TestTovarFeedbackState:
+    def test_state_carryover_vs_from_scratch_oracle(self):
+        """Incremental (peak, runtime) state == a fresh fit on the
+        concatenated history, outcome for outcome."""
+        mems, dts, Is = _traces(n=8, seed=2)
+        extra, edts, eIs = _traces(n=6, seed=3, hi=11.0)
+        online = TovarFeedback(machine_memory=64.0)
+        online.fit(mems, dts, Is)
+        for i, (m, d, I) in enumerate(zip(extra, edts, eIs)):
+            online.observe(ExecutionOutcome(mem=m, dt=d, input_gb=I,
+                                            retries=1))
+            assert online.refit("on_failure")
+            oracle = TovarFeedback(machine_memory=64.0)
+            oracle.fit(mems + extra[: i + 1], dts + edts[: i + 1],
+                       Is + eIs[: i + 1])
+            assert online._first_alloc == oracle._first_alloc
+            np.testing.assert_array_equal(np.sort(online._peaks),
+                                          np.sort(oracle._peaks))
+
+    def test_no_traces_retained(self):
+        """Online state is O(#executions): summary only, no trace copies."""
+        mems, dts, Is = _traces(n=4)
+        m = TovarFeedback()
+        m.fit(mems, dts, Is)
+        m.observe(ExecutionOutcome(mem=mems[0], dt=1.0, input_gb=Is[0]))
+        assert all(t is None for t in m._life.mems)
+        assert len(m._peaks) == 5
+
+    def test_offline_matches_tovar_ppm(self):
+        """Fit-once TovarFeedback is exactly TovarPPM (same solve)."""
+        mems, dts, Is = _traces(n=12, seed=5)
+        a = TovarPPM(machine_memory=32.0)
+        b = TovarFeedback(machine_memory=32.0)
+        a.fit(mems, dts, Is)
+        b.fit(mems, dts, Is)
+        assert a._first_alloc == b._first_alloc
+
+
+@pytest.mark.parametrize("wff,n", [(eager, 10), (sarek, 8)])
+def test_online_never_matches_offline_bitwise(wff, n):
+    """mode='online', refit='never' reproduces the offline ExperimentResult
+    bitwise on the fleet engine — every method, every family."""
+    wf = wff(n)
+    off = evaluate_workflow(wf, seed=0, train_frac=0.5, k=3)
+    on = evaluate_workflow(wf, seed=0, train_frac=0.5, k=3,
+                           mode="online", refit="never")
+    assert set(off.methods) == set(on.methods)
+    for mname, a in off.methods.items():
+        b = on.methods[mname]
+        assert a.total_gbs == b.total_gbs, mname
+        assert a.retries == b.retries, mname
+        assert a.failures == b.failures, mname
+        assert a.per_family_gbs == b.per_family_gbs, mname
+
+
+def test_online_round_size_invariant_under_never():
+    """With refit='never' the round partitioning cannot change results."""
+    wf = eager(8)
+    r1 = evaluate_workflow(wf, seed=1, train_frac=0.5, k=3,
+                           methods=["ks+", "witt-p95"],
+                           mode="online", refit="never", round_size=1)
+    r3 = evaluate_workflow(wf, seed=1, train_frac=0.5, k=3,
+                           methods=["ks+", "witt-p95"],
+                           mode="online", refit="never", round_size=3)
+    for m in r1.methods:
+        assert r1.methods[m].total_gbs == r3.methods[m].total_gbs
+
+
+def test_online_mode_validation():
+    wf = eager(6)
+    with pytest.raises(ValueError):
+        evaluate_workflow(wf, seed=0, train_frac=0.5, mode="online",
+                          engine="oracle")
+    with pytest.raises(ValueError):
+        evaluate_workflow(wf, seed=0, train_frac=0.5, mode="sideways")
+    with pytest.raises(ValueError):
+        evaluate_workflow(wf, seed=0, train_frac=0.5, mode="online",
+                          round_size=0)
+
+
+def test_tovar_feedback_beats_tovar_ppm_online():
+    """The acceptance bar: feedback strictly reduces total wastage vs the
+    fit-once baseline on a seeded workflow replay (and costs fewer
+    retries, because refits stop repeat OOMs on under-sampled families)."""
+    res = evaluate_workflow(eager(10), seed=0, train_frac=0.25, k=4,
+                            methods=["tovar-ppm", "tovar-feedback"],
+                            mode="online", refit="on_failure")
+    ppm = res.methods["tovar-ppm"]
+    fb = res.methods["tovar-feedback"]
+    assert fb.total_gbs < ppm.total_gbs
+    assert fb.retries < ppm.retries
+
+
+def test_frozen_baseline_stays_frozen_online():
+    """tovar-ppm (spec online=False) must replay identically whatever the
+    refit policy — the paper baseline cannot silently learn."""
+    never = evaluate_workflow(eager(8), seed=2, train_frac=0.5,
+                              methods=["tovar-ppm"], mode="online",
+                              refit="never")
+    onf = evaluate_workflow(eager(8), seed=2, train_frac=0.5,
+                            methods=["tovar-ppm"], mode="online",
+                            refit="on_failure")
+    assert never.methods["tovar-ppm"].total_gbs == \
+        onf.methods["tovar-ppm"].total_gbs

@@ -1,0 +1,251 @@
+"""Method registry: specs, aliases, names, construction, offset tuning."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationPlan,
+    KSegments,
+    KSPlus,
+    RetrySpec,
+    TovarFeedback,
+    WittPercentile,
+    registry,
+)
+from repro.core.envelope import OffsetCandidate
+from repro.sched import ClusterSim, ElasticPlanner, Job, Node, evaluate_workflow
+from repro.traces import eager
+
+
+def _linear_traces(n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    Is, mems = [], []
+    for _ in range(n):
+        I = float(rng.uniform(1, 8))
+        L = int(30 + 10 * I)
+        split = int(0.7 * L)
+        m = np.concatenate([np.full(split, 1.0 + 0.3 * I),
+                            np.full(L - split, 2.0 + 0.8 * I)])
+        mems.append(m + rng.normal(0, 0.01, L))
+        Is.append(I)
+    return mems, [1.0] * n, Is
+
+
+class TestRegistry:
+    def test_round_trip_register_construct(self):
+        """register → construct → alias → capability flags."""
+
+        class Flat:
+            def _fit(self, mems, dts, inputs):
+                pass
+
+        @registry.register_method(
+            "test-flat", retry=RetrySpec("double"), cls=Flat,
+            aliases=("tf-alias",), online=False, multi_segment=False)
+        def _make(ctx):
+            inst = Flat()
+            inst.limit = ctx.default_limit
+            return inst
+
+        try:
+            spec = registry.get_spec("test-flat")
+            assert spec.retry == RetrySpec("double")
+            assert not spec.online and not spec.multi_segment and spec.packed
+            assert registry.canonical_name("tf-alias") == "test-flat"
+            inst = registry.make("tf-alias", default_limit=4.0)
+            assert isinstance(inst, Flat) and inst.limit == 4.0
+            assert "test-flat" in registry.method_names()
+        finally:
+            registry.unregister_method("test-flat")
+        assert "test-flat" not in registry.method_names()
+        with pytest.raises(KeyError):
+            registry.canonical_name("tf-alias")
+
+    def test_duplicate_name_rejected(self):
+        with pytest.raises(ValueError):
+            @registry.register_method("ks+", retry=RetrySpec("none"),
+                                      cls=KSPlus)
+            def _dup(ctx):
+                return KSPlus()
+
+    def test_default_zoo_names(self):
+        names = registry.method_names()
+        for n in ("ks+", "ks+auto", "k-segments-selective", "tovar-ppm",
+                  "tovar-feedback", "ppm-improved", "witt-p95", "default"):
+            assert n in names
+
+    def test_capability_flags(self):
+        assert registry.get_spec("ks+").multi_segment
+        assert not registry.get_spec("witt-p95").multi_segment
+        # frozen paper baselines do not participate in online feedback
+        assert not registry.get_spec("tovar-ppm").online
+        assert not registry.get_spec("default").online
+        assert registry.get_spec("tovar-feedback").online
+
+    def test_instance_names_from_registry(self):
+        """The registry is the single source of method names."""
+        assert KSPlus().name == "ks+"
+        assert KSegments(variant="partial").name == "k-segments-partial"
+        assert KSegments(variant="selective").name == "k-segments-selective"
+        assert WittPercentile().name == "witt-p95"
+        assert WittPercentile(percentile=50).name == "witt-p50"
+        assert TovarFeedback().name == "tovar-feedback"
+        assert registry.make("default", default_limit=2.0).name == "default"
+
+    def test_make_uses_context(self):
+        m = registry.make("ks+", k=6)
+        assert m.k == 6
+        d = registry.make("default", default_limit=3.5)
+        assert d.limit_gb == 3.5
+
+    def test_resolve_passthrough(self):
+        m = KSPlus(k=2)
+        assert registry.resolve(m) is m
+        assert isinstance(registry.resolve("witt"), WittPercentile)
+
+    def test_retry_spec_lookup(self):
+        assert registry.try_retry_spec("ks+") == RetrySpec("ksplus")
+        assert registry.try_retry_spec("double") is None  # RetrySpec kind
+
+
+class TestSimulatorIntegration:
+    def test_method_result_names_canonical(self):
+        """Aliases in the methods list resolve to canonical result names,
+        and the per-family default limit is the family's real one."""
+        res = evaluate_workflow(eager(8), seed=0, train_frac=0.5, k=3,
+                                methods=["witt", "ksplus", "default"])
+        assert set(res.methods) == {"witt-p95", "ks+", "default"}
+
+    def test_default_methods_shim(self):
+        from repro.sched import default_methods
+        zoo = default_methods(3, 64.0, 5.0)
+        assert list(zoo) == registry.method_names()
+        d = zoo["default"]()
+        assert d.limit_gb == 5.0 and d.machine_memory == 64.0
+        assert zoo["ks+"]().k == 3
+
+
+def _cluster_jobs(n=16):
+    rng = np.random.default_rng(3)
+    jobs = []
+    for j in range(n):
+        L = int(rng.integers(20, 40))
+        split = int(0.6 * L)
+        mem = np.concatenate([np.full(split, 2.0), np.full(L - split, 6.0)])
+        plan = AllocationPlan(starts=np.asarray([0.0, split - 1.0]),
+                              peaks=np.asarray([2.2, 6.5]))
+        jobs.append(Job(jid=j, family="a" if j % 2 else "b", input_gb=1.0,
+                        mem=mem, dt=1.0, plan=plan, est_runtime=float(L)))
+    return jobs
+
+
+class TestSchedulerRegistryNames:
+    def test_cluster_retry_by_registry_name(self):
+        r1 = ClusterSim([Node(0, 24.0)]).run(_cluster_jobs(), "ks+")
+        r2 = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), RetrySpec("ksplus"))
+        assert r1.placements == r2.placements
+        assert r1.total_wastage_gbs == r2.total_wastage_gbs
+
+    def test_cluster_retry_by_method_object(self):
+        m = KSPlus()
+        r1 = ClusterSim([Node(0, 24.0)]).run(_cluster_jobs(), m)
+        r2 = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), RetrySpec("ksplus", bump=m.last_peak_bump))
+        assert r1.placements == r2.placements
+
+    def test_cluster_auto_offsets(self):
+        """offsets='auto' returns the grid's lowest-wastage result."""
+        sweep = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), "ks+", offsets=list(registry.DEFAULT_OFFSET_GRID))
+        best = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), "ks+", offsets="auto")
+        assert best.total_wastage_gbs == min(
+            r.total_wastage_gbs for r in sweep)
+        assert best.offset in registry.DEFAULT_OFFSET_GRID
+
+    def test_cluster_per_family_offsets_identity(self):
+        """An identity per-family mapping reproduces the base run."""
+        base = ClusterSim([Node(0, 24.0)]).run(_cluster_jobs(), "ks+")
+        ident = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), "ks+",
+            offsets={"a": OffsetCandidate(), "b": OffsetCandidate()})
+        assert ident.placements == base.placements
+        assert ident.total_wastage_gbs == base.total_wastage_gbs
+
+    def test_cluster_per_family_offsets_differ(self):
+        padded = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), "ks+", offsets={"a": OffsetCandidate(peak=0.5)})
+        base = ClusterSim([Node(0, 24.0)]).run(_cluster_jobs(), "ks+")
+        assert padded.total_wastage_gbs != base.total_wastage_gbs
+
+    def test_cluster_per_family_unknown_family_rejected(self):
+        """A typo'd family key must fail loudly, not silently run at
+        identity offsets."""
+        with pytest.raises(ValueError, match="unknown families"):
+            ClusterSim([Node(0, 24.0)]).run(
+                _cluster_jobs(), "ks+",
+                offsets={"nonexistent": OffsetCandidate(peak=0.1)})
+
+    def test_cluster_per_family_bump_conflict(self):
+        with pytest.raises(ValueError):
+            ClusterSim([Node(0, 24.0)]).run(
+                _cluster_jobs(), "ks+",
+                offsets={"a": OffsetCandidate(last_peak_bump=0.3),
+                         "b": OffsetCandidate(last_peak_bump=0.5)})
+
+    def test_elastic_admit_by_name_and_method(self):
+        pl = ElasticPlanner()
+        pl.node_join("s0", 16.0)
+        assert pl.submit("j1", "default", 0.0, input_gb=2.0) == "s0"
+        mems, dts, Is = _linear_traces()
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        assert pl.submit("j2", m, 0.0, input_gb=2.0) == "s0"
+        with pytest.raises(ValueError):  # methods need an input size
+            pl.admit("j3", "default", 0.0)
+
+
+class TestOffsetTuning:
+    def test_tune_offset_picks_grid_argmin(self):
+        mems, dts, Is = _linear_traces()
+        m = KSPlus(k=3)
+        m.fit(mems, dts, Is)
+        cands = (OffsetCandidate(), OffsetCandidate(peak=0.2),
+                 OffsetCandidate(peak=-0.5))  # -50% forces OOM retries
+        best, totals = registry.tune_offset(
+            m, mems, dts, Is, candidates=cands, machine_memory=64.0)
+        assert len(totals) == len(cands)
+        assert best == cands[int(np.argmin(totals))]
+        # severe under-allocation must never win the replay
+        assert best != cands[2]
+
+    def test_tune_offset_matches_oracle_totals(self):
+        """Per-candidate totals equal one-job-at-a-time fleet replays."""
+        from repro.core import simulate_fleet
+        from repro.core.envelope import apply_offsets
+        from repro.core.fleet import packed_predict
+        mems, dts, Is = _linear_traces(n=12, seed=1)
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        cands = (OffsetCandidate(), OffsetCandidate(peak=-0.4,
+                                                    last_peak_bump=0.6))
+        _, totals = registry.tune_offset(
+            m, mems, dts, Is, candidates=cands, machine_memory=32.0)
+        starts, peaks, nseg = packed_predict(m, Is)
+        for cand, tot in zip(cands, totals):
+            st, pk = apply_offsets(starts, peaks, nseg, cand)
+            spec = m.retry_spec
+            if cand.last_peak_bump is not None:
+                spec = spec._replace(bump=cand.last_peak_bump)
+            fr = simulate_fleet(
+                (st.astype(np.float32), pk.astype(np.float32), nseg),
+                spec, mems, 1.0, machine_memory=32.0)
+            assert tot == fr.total_gbs
+
+    def test_tune_offset_rejects_hetero_dt(self):
+        mems, dts, Is = _linear_traces(n=6)
+        m = KSPlus(k=2)
+        m.fit(mems, dts, Is)
+        with pytest.raises(ValueError):
+            registry.tune_offset(m, mems, [1.0] * 5 + [2.0], Is)
