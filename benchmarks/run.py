@@ -541,6 +541,90 @@ def bench_admission(full: bool):
         }, f, indent=1)
 
 
+# ------------------------------------------------------------ workload_replay
+def bench_workload_replay(full: bool):
+    """DAG-aware cluster replay on a generated workload (repro.workloads).
+
+    Three measurements, dumped into BENCH_workloads.json:
+
+    * generation throughput — the ``workload_replay`` scenario (layered
+      random DAG, 4 task families) synthesized straight into packed
+      lanes at >=5k tasks;
+    * differential speedup — the same scenario at a few hundred tasks
+      replayed through the fused engine AND the legacy per-job loop with
+      dependency-release order, placements asserted identical;
+    * fleet-scale replay — the >=5k-task DAG through
+      ``ClusterSim(engine="fused")``, release order verified against the
+      DAG (every task placed only after all parents finished).
+    """
+    from repro.core import RetrySpec, ksplus_retry
+    from repro.sched import ClusterSim, Node
+    from repro.workloads import assert_release_order, scenarios
+
+    def nodes():
+        return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0), Node(3, 96.0)]
+
+    n_small = 600 if full else 400
+    n_big = 8192 if full else 5120
+
+    wf_small = scenarios.get("workload_replay", n_tasks=n_small, seed=0)
+
+    def fused_small():
+        return ClusterSim(nodes(), engine="fused").run(
+            wf_small.to_jobs(under_frac=0.2, seed=0), RetrySpec("ksplus"))
+
+    def legacy_small():
+        return ClusterSim(nodes(), engine="legacy").run(
+            wf_small.to_jobs(under_frac=0.2, seed=0), ksplus_retry)
+
+    fres, us_f = _timed(fused_small, repeat=3)
+    lres, us_l = _timed(legacy_small, repeat=1, warmup=False)
+    assert fres.placements == lres.placements, \
+        "fused DAG replay diverged from the legacy loop"
+    assert fres.retries == lres.retries
+    assert fres.unschedulable == lres.unschedulable
+    assert_release_order(wf_small.to_jobs(seed=0), fres.placements)
+    speedup = us_l / us_f
+
+    def gen_big():
+        return scenarios.get("workload_replay", n_tasks=n_big, seed=1)
+
+    wf_big, us_gen = _timed(gen_big, repeat=1)  # warmup amortizes the jit
+    big_jobs = wf_big.to_jobs(under_frac=0.1, seed=1)
+    t0 = time.perf_counter()
+    bres = ClusterSim(nodes(), engine="fused").run(
+        big_jobs, RetrySpec("ksplus"))
+    us_big = (time.perf_counter() - t0) * 1e6
+    assert_release_order(big_jobs, bres.placements)
+    assert bres.unschedulable == 0
+
+    _row("workload_gen_us", us_gen,
+         f"{n_big} tasks -> {len(wf_big.batch.buckets)} packed buckets "
+         f"({n_big / (us_gen / 1e6):,.0f} tasks/s)")
+    _row("workload_replay_speedup", us_f,
+         f"{speedup:.1f}x vs legacy (DAG release, {n_small} tasks, "
+         f"{fres.retries} retries, placements bitwise)")
+    _row("workload_replay_legacy_us", us_l,
+         f"makespan {lres.makespan:.0f}s")
+    _row("workload_replay_5k_us", us_big,
+         f"{n_big}-task layered DAG via fused engine, "
+         f"{bres.retries} retries, release order verified")
+    with open("BENCH_workloads.json", "w") as f:
+        json.dump({
+            "workload_gen_tasks": n_big,
+            "workload_gen_us": us_gen,
+            "workload_replay_tasks": n_small,
+            "workload_replay_speedup_x": speedup,
+            "workload_replay_fused_us": us_f,
+            "workload_replay_legacy_us": us_l,
+            "workload_replay_placements_match": True,
+            "workload_replay_big_tasks": n_big,
+            "workload_replay_big_fused_us": us_big,
+            "workload_replay_big_retries": bres.retries,
+            "workload_replay_big_release_order_ok": True,
+        }, f, indent=1)
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(full: bool):
     """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
@@ -628,6 +712,7 @@ BENCHES = {
     "online_replay": bench_online_replay,
     "cluster_sim": bench_cluster_sim,
     "admission": bench_admission,
+    "workload_replay": bench_workload_replay,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }

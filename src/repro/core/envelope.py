@@ -88,11 +88,17 @@ class OffsetCandidate:
     made monotone, exactly like the predictor's own offsets), and ksplus
     retries use ``last_peak_bump`` when given.  ``OffsetCandidate()`` is the
     identity — it reproduces the un-swept run decision for decision.
+
+    Every field accepts a per-lane ``(B,)`` array as well as a scalar:
+    ``peak``/``start`` flow through :func:`apply_offsets`, and a per-lane
+    ``last_peak_bump`` rides the ``bump`` axis of :func:`retry_packed` /
+    the fleet engine (NaN entries fall back to the retry spec's static
+    bump) — so per-task-family tuning winners may disagree on all three.
     """
 
-    peak: float = 0.0
-    start: float = 0.0
-    last_peak_bump: float | None = None
+    peak: float | np.ndarray = 0.0
+    start: float | np.ndarray = 0.0
+    last_peak_bump: float | np.ndarray | None = None
 
 
 def apply_offsets(starts: np.ndarray, peaks: np.ndarray, nseg: np.ndarray,
@@ -322,13 +328,19 @@ def fits_column(capacity: float, run_starts: np.ndarray,
 
 def retry_packed(spec: RetrySpec, starts: np.ndarray, peaks: np.ndarray,
                  nseg: np.ndarray, t_fail: np.ndarray, used: np.ndarray,
-                 machine_memory: float = np.inf):
+                 machine_memory: float = np.inf,
+                 bump: np.ndarray | None = None):
     """Vectorized ``(plan, t_fail, used) -> plan`` over every lane at once.
 
     The float64 reference for every retry rule; the per-plan functions in
     :mod:`repro.core.retry` are 1-lane views of this, and the fleet engine's
     jnp transform mirrors it rule for rule.  Returns ``(starts, peaks)``
     (new arrays; inputs are not modified).
+
+    ``bump`` optionally overrides ``spec.bump`` *per lane* (a ``(B,)``
+    array) — the ksplus last-peak bump is the one retry parameter offset
+    tuning sweeps, and per-task-family winners may disagree on it within
+    one packed batch.  ``None`` keeps the spec's static value everywhere.
     """
     starts = np.asarray(starts, np.float64)
     peaks = np.asarray(peaks, np.float64)
@@ -365,6 +377,8 @@ def retry_packed(spec: RetrySpec, starts: np.ndarray, peaks: np.ndarray,
             idx >= jcol, np.maximum(peaks, target[:, None]), peaks)
 
     if spec.kind == "ksplus":
+        bump_col = (spec.bump if bump is None
+                    else np.asarray(bump, np.float64).reshape(B, 1))
         is_last = (j >= nseg - 1)[:, None]
         # --- re-time branch: next segment begins exactly at the failure time,
         # every later one is scaled by the same factor.
@@ -379,7 +393,7 @@ def retry_packed(spec: RetrySpec, starts: np.ndarray, peaks: np.ndarray,
         st = np.where(real, st, PAD_START)
         # --- last-segment branch: bump the final peak, keep monotone.
         pk = np.where(idx == (nseg - 1)[:, None],
-                      peaks * (1.0 + spec.bump), peaks)
+                      peaks * (1.0 + bump_col), peaks)
         pk = np.maximum.accumulate(pk, axis=1)
         return (np.where(is_last, starts, st), np.where(is_last, pk, peaks))
 

@@ -48,6 +48,7 @@ __all__ = [
     "pack_plans",
     "pack_traces",
     "pad_lane_axis",
+    "group_lengths",
     "bucket_traces",
     "subset_batch",
     "fleet_eval",
@@ -219,17 +220,20 @@ def _make_bucket(idx: np.ndarray, mems_list, T: int) -> TraceBucket:
         dlengths=jnp.asarray(plen), dsummem=jnp.asarray(summem))
 
 
-def bucket_traces(mems: Sequence[np.ndarray], min_t: int = 128,
-                  min_lanes: int = 16, max_buckets: int = 4) -> FleetBatch:
-    """Group traces into power-of-two length buckets (see FleetBatch).
-
-    Sparse buckets are merged into the next-longer one: below ``min_lanes``
-    lanes a bucket costs more in per-group overhead than its padding saves,
-    and ``max_buckets`` bounds the orchestration fan-out.
+def group_lengths(lengths: Sequence[int], min_t: int = 128,
+                  min_lanes: int = 16, max_buckets: int = 4):
+    """The bucket policy itself: lane indices grouped by power-of-two
+    padded length.  Sparse buckets are merged into the next-longer one
+    (below ``min_lanes`` lanes a bucket costs more in per-group overhead
+    than its padding saves) and ``max_buckets`` bounds the orchestration
+    fan-out.  Returns ``[(T, sorted index array), ...]`` ascending in T —
+    shared by :func:`bucket_traces` and the workload generator's
+    direct-to-packed-lanes path (:mod:`repro.workloads.generate`), so the
+    two always agree on layout.
     """
     by_t: dict = {}
-    for i, m in enumerate(mems):
-        T = max(len(m), min_t)
+    for i, n in enumerate(lengths):
+        T = max(int(n), min_t)
         T = 1 << (T - 1).bit_length()
         by_t.setdefault(T, []).append(i)
     groups = []  # ascending T, merged
@@ -248,9 +252,16 @@ def bucket_traces(mems: Sequence[np.ndarray], min_t: int = 128,
         T = groups[i + 1][0]
         groups[i + 1] = (T, groups[i][1] + groups[i + 1][1])
         del groups[i]
+    return [(T, np.asarray(sorted(ids), np.int64)) for T, ids in groups]
+
+
+def bucket_traces(mems: Sequence[np.ndarray], min_t: int = 128,
+                  min_lanes: int = 16, max_buckets: int = 4) -> FleetBatch:
+    """Group traces into power-of-two length buckets (see FleetBatch and
+    :func:`group_lengths`, the shared grouping policy)."""
     buckets = []
-    for T, ids in groups:
-        idx = np.asarray(sorted(ids), np.int64)
+    for T, idx in group_lengths([len(m) for m in mems], min_t,
+                                min_lanes, max_buckets):
         buckets.append(_make_bucket(idx, [mems[i] for i in idx], T))
     return FleetBatch(n=len(mems), buckets=tuple(buckets))
 
@@ -389,11 +400,13 @@ def first_attempt(starts, peaks, mems, lengths, machine_memory, *,
 
 # --------------------------------------------------------------- retry rules
 def _retry_transform(spec: RetrySpec, starts, peaks, nseg, t_fail, used,
-                     machine_memory):
+                     machine_memory, bump=None):
     """Vectorized ``(plan, t_fail, used) -> plan`` over every lane at once.
 
     Mirrors :mod:`repro.core.retry` rule for rule; lanes that are not
-    retrying are masked out by the caller.
+    retrying are masked out by the caller.  ``bump`` optionally overrides
+    the static ``spec.bump`` per lane (a traced ``(B,)`` array — see
+    :func:`repro.core.envelope.retry_packed`).
     """
     B, K = starts.shape
     idx = jnp.arange(K)[None, :]
@@ -438,8 +451,9 @@ def _retry_transform(spec: RetrySpec, starts, peaks, nseg, t_fail, used,
         st = st.at[:, 0].set(0.0)
         st = jnp.where(real, st, PAD_START)
         # --- last-segment branch: bump the final peak, keep monotone.
+        bump_col = spec.bump if bump is None else bump[:, None]
         pk = jnp.where(idx == (nseg - 1)[:, None],
-                       peaks * (1.0 + spec.bump), peaks)
+                       peaks * (1.0 + bump_col), peaks)
         pk = jax.lax.cummax(pk, axis=1)
         new_starts = jnp.where(is_last[:, None], starts, st)
         new_peaks = jnp.where(is_last[:, None], pk, peaks)
@@ -451,8 +465,13 @@ def _retry_transform(spec: RetrySpec, starts, peaks, nseg, t_fail, used,
 # -------------------------------------------------------------------- engine
 def _engine_loop(starts, peaks, nseg, mems, lengths, machine_memory, *,
                  retry: RetrySpec, dt: float, max_attempts: int,
-                 backend: str, block_t: int = 512):
-    """Traced body of the retry engine (shared by every jitted entry point)."""
+                 backend: str, block_t: int = 512, bump_lanes=None):
+    """Traced body of the retry engine (shared by every jitted entry point).
+
+    ``bump_lanes`` is an optional traced ``(B,)`` per-lane override of the
+    ksplus ``retry.bump`` — tuned offsets may assign a different
+    last-peak bump per task family within one lane batch.
+    """
     B, T = mems.shape
     validb = jnp.arange(T)[None, :] < lengths[:, None]
     # Loop-invariant trace precomputes, amortized over every attempt.
@@ -492,7 +511,8 @@ def _engine_loop(starts, peaks, nseg, mems, lengths, machine_memory, *,
         retrying = active & failed & ~unsat
         t_fail = jnp.maximum(viol, 0).astype(jnp.float32) * dt
         nsts, npks = _retry_transform(
-            retry, sts, capped, nseg, t_fail, used, machine_memory)
+            retry, sts, capped, nseg, t_fail, used, machine_memory,
+            bump=bump_lanes)
         sts = jnp.where(retrying[:, None], nsts, sts)
         pks = jnp.where(retrying[:, None], npks, capped)
         return (it + 1, sts, pks, retrying, succ, att, w)
@@ -517,7 +537,7 @@ def _engine_loop(starts, peaks, nseg, mems, lengths, machine_memory, *,
 )
 def fleet_eval(starts, peaks, nseg, mems, lengths, machine_memory, *,
                retry: RetrySpec, dt: float, max_attempts: int = 25,
-               backend: str = "jnp", block_t: int = 512):
+               backend: str = "jnp", block_t: int = 512, bump_lanes=None):
     """Run the full OOM/retry protocol for every lane in one XLA program.
 
     Args:
@@ -528,12 +548,15 @@ def fleet_eval(starts, peaks, nseg, mems, lengths, machine_memory, *,
         does not recompile).
       retry: static :class:`RetrySpec`.
       backend: ``"jnp"`` | ``"pallas"`` | ``"pallas-interpret"``.
+      bump_lanes: optional (B,) per-lane ksplus last-peak bump override
+        (traced; ``None`` keeps ``retry.bump`` everywhere).
 
     Returns ``(wastage, attempts, succeeded)``, each (B,).
     """
     return _engine_loop(starts, peaks, nseg, mems, lengths, machine_memory,
                         retry=retry, dt=dt, max_attempts=max_attempts,
-                        backend=backend, block_t=block_t)
+                        backend=backend, block_t=block_t,
+                        bump_lanes=bump_lanes)
 
 
 def _probe_first_jnp(starts, peaks, memsneg, lengths, summem, dt: float):
@@ -584,15 +607,17 @@ def _retry_many(groups, machine_memory, *, specs, dt: float,
                 block_t: int = 512):
     """Full retry loops for many compacted failure groups, ONE dispatch.
 
-    ``groups`` is a tuple of ``(starts, peaks, nseg, mems, lengths)``;
-    ``specs`` the matching static tuple of :class:`RetrySpec`.
+    ``groups`` is a tuple of ``(starts, peaks, nseg, mems, lengths, bump)``
+    (``bump`` a per-lane ksplus bump array or ``None``); ``specs`` the
+    matching static tuple of :class:`RetrySpec`.
     """
     out = []
-    for spec, (starts, peaks, nseg, mems, lengths) in zip(specs, groups):
+    for spec, (starts, peaks, nseg, mems, lengths, bump) in zip(specs,
+                                                                groups):
         out.append(_engine_loop(
             starts, peaks, nseg, mems, lengths, machine_memory,
             retry=spec, dt=dt, max_attempts=max_attempts, backend=backend,
-            block_t=block_t))
+            block_t=block_t, bump_lanes=bump))
     return tuple(out)
 
 
@@ -662,8 +687,11 @@ def simulate_fleet_many(
     prediction method — all evaluated against the same executions.  Each
     job's ``plans`` may be a list of :class:`AllocationPlan` or an already
     packed ``(starts, peaks, nseg)`` triple (see :func:`pack_plans` /
-    :func:`packed_predict`).  The orchestration is built for a
-    dispatch-bound host:
+    :func:`packed_predict`); an optional third element is a per-lane
+    ``(B,)`` ksplus last-peak-bump array overriding ``retry_spec.bump``
+    lane for lane (NaN entries keep the spec's static value) — tuned
+    per-task-family offsets ride the lane batch this way.  The
+    orchestration is built for a dispatch-bound host:
 
     * traces are grouped into power-of-two **length buckets** (padding every
       lane to the longest trace would spend most of the memory-bound probe
@@ -681,10 +709,18 @@ def simulate_fleet_many(
     """
     batch = _as_batch(mems)
     B = batch.n
-    jobs = [(plans, RetrySpec(r) if isinstance(r, str) else r)
-            for plans, r in jobs]
+    norm = []
+    for item in jobs:
+        plans, r = item[0], item[1]
+        spec = RetrySpec(r) if isinstance(r, str) else r
+        bump = item[2] if len(item) > 2 else None
+        if bump is not None:
+            bump = np.where(np.isnan(np.asarray(bump, np.float64)),
+                            spec.bump, bump).astype(np.float32)
+        norm.append((plans, spec, bump))
+    jobs = norm
     packed_jobs = []  # (starts, peaks, nseg) over ALL lanes, per job
-    for plans, _ in jobs:
+    for plans, _, _ in jobs:
         sp = plans if isinstance(plans, tuple) else pack_plans(plans, k)
         if sp[0].shape[0] != B:
             raise ValueError(f"{sp[0].shape[0]} plans vs {B} traces")
@@ -721,7 +757,7 @@ def simulate_fleet_many(
     # Phase B: compact failures per group, run every retry loop at once.
     fail_groups, fail_specs, fail_meta = [], [], []
     gi = 0
-    for j, (_, spec) in enumerate(jobs):
+    for j, (_, spec, bump) in enumerate(jobs):
         starts, peaks, nseg = packed_jobs[j]
         for bucket in batch.buckets:
             b = len(bucket.idx)
@@ -734,9 +770,14 @@ def simulate_fleet_many(
             if not ok.all():
                 local = np.nonzero(~ok)[0]
                 fail = bucket.idx[local]
-                fail_groups.append(_pad_lanes(
+                padded = _pad_lanes(
                     starts[fail], peaks[fail], nseg[fail],
-                    bucket.mems[local], bucket.lengths[local]))
+                    bucket.mems[local], bucket.lengths[local])
+                fbump = None
+                if bump is not None:
+                    (fbump,) = pad_lane_axis(
+                        (bump[fail],), (np.float32(spec.bump),))
+                fail_groups.append(padded + (fbump,))
                 fail_specs.append(spec)
                 fail_meta.append((j, fail, len(fail)))
             gi += 1
@@ -763,14 +804,17 @@ def simulate_fleet(
     max_attempts: int = 25,
     backend: str = "auto",
     k: int | None = None,
+    bump_lanes: np.ndarray | None = None,
 ) -> FleetResult:
     """Simulate one execution per (plan, trace) lane — the fleet primitive.
 
     Drop-in batched equivalent of calling
     :func:`repro.core.wastage.simulate_execution` per lane; see
     :func:`simulate_fleet_many` for the orchestration (this is the
-    single-job case).
+    single-job case).  ``bump_lanes`` optionally assigns a per-lane ksplus
+    last-peak bump (NaN = keep ``retry``'s static value).
     """
     return simulate_fleet_many(
-        [(plans, retry)], mems, dt, machine_memory=machine_memory,
-        max_attempts=max_attempts, backend=backend, k=k)[0]
+        [(plans, retry, bump_lanes)], mems, dt,
+        machine_memory=machine_memory, max_attempts=max_attempts,
+        backend=backend, k=k)[0]

@@ -40,7 +40,34 @@ from repro.core.predictor import (
 from repro.core.retry import ksplus_retry
 
 __all__ = ["ExecutionOutcome", "MemoryPredictor", "RefitPolicy",
+           "HeteroDtWarning", "reset_hetero_dt_warnings",
            "KSPlus", "KSPlusAuto"]
+
+
+class HeteroDtWarning(UserWarning):
+    """Heterogeneous per-execution ``dt`` values hit a batched-engine path
+    that needs a resample/fallback policy (see :class:`KSPlusAuto`)."""
+
+
+# Deduplication registry for HeteroDtWarning: a 10k-task hetero-dt scenario
+# fits one KSPlusAuto per task family, and every one of those fits would
+# repeat the same diagnosis — the situation is a property of the *workload*,
+# so identical (policy, target-dt) situations warn once per process.
+_HETERO_WARNED: set = set()
+
+
+def reset_hetero_dt_warnings() -> None:
+    """Clear the :class:`HeteroDtWarning` dedup registry (tests; or after
+    switching workloads, to re-surface the diagnosis once)."""
+    _HETERO_WARNED.clear()
+
+
+def _warn_hetero_once(policy: str, dt0: float, message: str) -> None:
+    key = (policy, float(dt0))
+    if key in _HETERO_WARNED:
+        return
+    _HETERO_WARNED.add(key)
+    warnings.warn(message, HeteroDtWarning, stacklevel=3)
 
 
 def _resample_trace(mem: np.ndarray, dt: float, dt0: float) -> np.ndarray:
@@ -165,7 +192,10 @@ class KSPlusAuto(MemoryPredictor):
     The fleet engine's lane batch shares one sampling period, so
     heterogeneous per-execution ``dt`` values need a policy
     (``hetero_dt``, only consulted when ``engine="fleet"`` and the ``dts``
-    actually differ — a warning is emitted either way):
+    actually differ — a :class:`HeteroDtWarning` is emitted either way,
+    deduplicated per (policy, target dt) per process so a 10k-task
+    hetero-dt scenario diagnoses the situation once, not once per task
+    family; :func:`reset_hetero_dt_warnings` re-arms it):
 
     * ``"resample"`` (default) — sample-and-hold every training trace onto
       the finest observed ``dt`` and select k on the batched engine.  The
@@ -207,22 +237,25 @@ class KSPlusAuto(MemoryPredictor):
             totals = self._training_wastage_fleet(models, mems, dts, inputs)
         elif self.hetero_dt == "resample":
             dt0 = float(min(float(d) for d in dts))
-            warnings.warn(
+            _warn_hetero_once(
+                "resample", dt0,
                 "KSPlusAuto.fit: executions have heterogeneous dt values; "
                 f"resampling training traces to the finest dt ({dt0}) for "
                 "the batched k-selection replay (hetero_dt='resample'; use "
-                "hetero_dt='oracle' for exact native-dt replays)",
-                UserWarning, stacklevel=2)
+                "hetero_dt='oracle' for exact native-dt replays).  Warned "
+                "once per process for this situation — see "
+                "repro.core.ksplus.reset_hetero_dt_warnings")
             resampled = [_resample_trace(m_, float(d), dt0)
                          for m_, d in zip(mems, dts)]
             totals = self._training_wastage_fleet(
                 models, resampled, [dt0] * len(mems), inputs)
         else:  # hetero_dt == "oracle" (validated above)
-            warnings.warn(
+            _warn_hetero_once(
+                "oracle", 0.0,
                 "KSPlusAuto.fit: executions have heterogeneous dt values; "
                 "falling back to the per-execution oracle replay "
-                "(hetero_dt='oracle')",
-                UserWarning, stacklevel=2)
+                "(hetero_dt='oracle').  Warned once per process — see "
+                "repro.core.ksplus.reset_hetero_dt_warnings")
             totals = self._training_wastage_oracle(models, mems, dts, inputs)
 
         best = (np.inf, None, None)

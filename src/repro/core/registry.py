@@ -61,6 +61,7 @@ __all__ = [
     "try_retry_spec",
     "DEFAULT_OFFSET_GRID",
     "tune_offset",
+    "tune_offset_map",
 ]
 
 
@@ -317,3 +318,28 @@ def tune_offset(method: Union[str, MemoryPredictor],
                                   machine_memory=machine_memory)
     totals = np.asarray([r.total_gbs for r in results])
     return cands[int(np.argmin(totals))], totals
+
+
+def tune_offset_map(fitted: Dict[str, Union[str, MemoryPredictor]],
+                    data: Dict[str, Tuple[Sequence[np.ndarray],
+                                          Sequence[float],
+                                          Sequence[float]]], *,
+                    candidates: Optional[Sequence[OffsetCandidate]] = None,
+                    machine_memory: float = 128.0
+                    ) -> Dict[str, OffsetCandidate]:
+    """Per-family :func:`tune_offset` winners, scheduler-ready.
+
+    ``fitted`` maps family -> fitted method (or fit-free registry name),
+    ``data`` maps family -> ``(mems, dts, inputs)`` training executions.
+    The returned mapping plugs straight into
+    ``ClusterSim.run(offsets=mapping)`` — winners may disagree on every
+    field *including* ``last_peak_bump``, which the scheduler folds into a
+    per-lane bump array on :func:`repro.core.envelope.retry_packed`.
+    """
+    out: Dict[str, OffsetCandidate] = {}
+    for fam, method in fitted.items():
+        mems, dts, inputs = data[fam]
+        out[fam], _ = tune_offset(
+            method, mems, dts, inputs, candidates=candidates,
+            machine_memory=machine_memory)
+    return out

@@ -59,7 +59,18 @@ placement logs bitwise on workloads with real margins.
 ``run(offsets=[...])`` sweeps peak/start safety offsets and
 ``last_peak_bump`` the way :class:`KSPlusAuto` sweeps k: plans are re-packed
 per candidate (cheap) while the trace batch stays device-resident and the
-per-candidate OOM probes hit the same jitted program.
+per-candidate OOM probes hit the same jitted program.  Per-family
+``offsets={family: OffsetCandidate}`` mappings may now disagree on *every*
+field including ``last_peak_bump`` — bumps fold into a per-lane array that
+rides :func:`repro.core.envelope.retry_packed`'s ``bump`` axis.
+
+Workflow DAGs: jobs may carry ``parents`` (jids that must *finish* first).
+All three engines drive the same dependency-release frontier
+(:class:`_DagFrontier`): only released jobs enter the admission queue, a
+``done`` event releases its children at that event time, and a permanent
+failure (unsatisfiable / out of attempts) counts every not-yet-released
+descendant as unschedulable.  Cycles, self-parents, duplicate and unknown
+job ids are rejected loudly at submit time with the offending ids named.
 """
 
 from __future__ import annotations
@@ -106,10 +117,78 @@ class Job:
     est_runtime: float       # scheduler-facing runtime estimate
     attempts: int = 0
     wasted_gbs: float = 0.0
+    # Workflow DAG edges: jids of jobs that must *finish* before this one
+    # becomes admissible (empty = released at t=0, the historical behavior).
+    parents: Tuple[int, ...] = ()
 
     @property
     def runtime(self) -> float:
         return len(self.mem) * self.dt
+
+
+class _DagFrontier:
+    """Dependency-release frontier shared by all three engines.
+
+    Built (and validated — loudly) at submit time from each job's
+    ``parents``; a job enters the admission queue only once every parent
+    has *finished*.  An OOM kill re-queues the killed job itself (its
+    parents already finished) but never re-blocks released children; a
+    *permanent* failure (unsatisfiable / out of attempts) dooms every
+    not-yet-released descendant — they are counted unschedulable and never
+    placed.  All three engines drive the same object the same way, so the
+    differential suites keep pinning their decision logs bitwise.
+    """
+
+    def __init__(self, jobs: List[Job]):
+        # One validator for every DAG surface (duplicates, self-parents,
+        # unknown parents, cycles — each named loudly); the wfcommons
+        # importer runs the same code over string task ids.
+        from repro.workloads.wfc import validate_dag_ids
+        jids = [job.jid for job in jobs]
+        validate_dag_ids(jids, [job.parents for job in jobs], kind="job")
+        self.index: Dict[int, int] = {jid: i for i, jid in enumerate(jids)}
+        B = len(jobs)
+        self.pending = np.zeros((B,), np.int64)   # unfinished parent count
+        self.children: List[List[int]] = [[] for _ in range(B)]
+        self.dead = np.zeros((B,), bool)
+        for i, job in enumerate(jobs):
+            for p in dict.fromkeys(job.parents):  # dedupe, keep order
+                self.children[self.index[p]].append(i)
+                self.pending[i] += 1
+
+    @classmethod
+    def build(cls, jobs: List[Job]) -> Optional["_DagFrontier"]:
+        """A fresh frontier, or ``None`` for dependency-free workloads."""
+        if not any(job.parents for job in jobs):
+            return None
+        return cls(jobs)
+
+    def roots(self) -> List[int]:
+        return [i for i in range(len(self.pending)) if self.pending[i] == 0]
+
+    def release(self, i: int) -> List[int]:
+        """Job index ``i`` finished; returns newly admissible job indices
+        (in the deterministic submission-order the engines share)."""
+        out = []
+        for c in self.children[i]:
+            self.pending[c] -= 1
+            if self.pending[c] == 0 and not self.dead[c]:
+                out.append(c)
+        return out
+
+    def doom(self, i: int) -> int:
+        """Job index ``i`` failed permanently: mark every not-yet-released
+        descendant dead; returns how many (each counts unschedulable)."""
+        count = 0
+        stack = list(self.children[i])
+        while stack:
+            c = stack.pop()
+            if self.dead[c]:
+                continue
+            self.dead[c] = True
+            count += 1
+            stack.extend(self.children[c])
+        return count
 
 
 @dataclasses.dataclass
@@ -233,10 +312,12 @@ class ClusterSim:
                         ) -> OffsetCandidate:
         """Fold a per-family candidate mapping into one per-lane candidate.
 
-        ``peak``/``start`` become per-lane arrays (identity for families
-        not in the mapping); a swept ``last_peak_bump`` is a *static* field
-        of the retry rule, so it must agree across every family that sets
-        one.
+        ``peak``/``start``/``last_peak_bump`` all become per-lane arrays
+        (identity for families not in the mapping): per-family
+        :func:`repro.core.registry.tune_offset` winners may disagree on
+        every field, including the ksplus last-peak bump — unmapped lanes
+        get NaN bumps, which fall back to the retry spec's static value
+        inside :func:`repro.core.envelope.retry_packed`.
         """
         families = {job.family for job in jobs}
         unknown = set(mapping) - families
@@ -246,21 +327,18 @@ class ClusterSim:
                 f"(workload families: {sorted(families)})")
         peak = np.zeros((len(jobs),), np.float64)
         start = np.zeros((len(jobs),), np.float64)
-        bumps = {c.last_peak_bump for c in mapping.values()
-                 if c.last_peak_bump is not None}
-        if len(bumps) > 1:
-            raise ValueError(
-                "per-family offsets with differing last_peak_bump values "
-                f"are not supported (got {sorted(bumps)}); the bump is a "
-                "static field of the retry rule")
+        bump = np.full((len(jobs),), np.nan, np.float64)
+        any_bump = False
         for i, job in enumerate(jobs):
             c = mapping.get(job.family)
             if c is not None:
                 peak[i] = c.peak
                 start[i] = c.start
+                if c.last_peak_bump is not None:
+                    bump[i] = c.last_peak_bump
+                    any_bump = True
         return OffsetCandidate(peak=peak, start=start,
-                               last_peak_bump=(bumps.pop() if bumps
-                                               else None))
+                               last_peak_bump=(bump if any_bump else None))
 
     # ---------------------------------------------------------- legacy loop
     def _run_legacy(self, jobs: List[Job], retry) -> ClusterResult:
@@ -273,7 +351,9 @@ class ClusterSim:
             def retry_fn(plan, t_fail, used, _spec=spec, _cap=cap_max):
                 return apply_retry_spec(_spec, plan, t_fail, used,
                                         machine_memory=_cap)
-        queue: List[Job] = list(jobs)
+        frontier = _DagFrontier.build(jobs)
+        queue: List[Job] = (list(jobs) if frontier is None
+                            else [jobs[i] for i in frontier.roots()])
         events: List[Tuple[float, int, str, int, Job]] = []
         seq = itertools.count()
         retries = 0
@@ -319,6 +399,10 @@ class ClusterSim:
                 job.wasted_gbs += float(np.sum(alloc - job.mem) * job.dt)
                 area_used += float(np.sum(job.mem) * job.dt)
                 done_at = max(done_at, t)
+                if frontier is not None:  # dependency-release
+                    queue.extend(
+                        jobs[c] for c in
+                        frontier.release(frontier.index[job.jid]))
             else:  # OOM kill
                 v = first_violation(job.plan, job.mem, job.dt)
                 alloc = alloc_at(job.plan, np.arange(v + 1) * job.dt)
@@ -329,6 +413,9 @@ class ClusterSim:
                         float(np.max(job.mem)) > max(
                             n.capacity_gb for n in self.nodes):
                     unschedulable += 1
+                    if frontier is not None:  # descendants can never run
+                        unschedulable += frontier.doom(
+                            frontier.index[job.jid])
                 else:
                     job.plan = retry_fn(job.plan, v * job.dt,
                                         float(job.mem[v]))
@@ -403,11 +490,16 @@ class ClusterSim:
                 "batched engines require empty Node.running; submit "
                 "resident jobs as part of `jobs` or use engine='legacy'")
         spec, retry_fn = _as_spec(retry)
+        bump_lanes = None
         if offset is not None and offset.last_peak_bump is not None:
             if spec is None:
                 raise ValueError(
                     "sweeping last_peak_bump requires a RetrySpec retry")
-            spec = spec._replace(bump=offset.last_peak_bump)
+            lb = np.asarray(offset.last_peak_bump, np.float64)
+            if lb.ndim == 0:
+                spec = spec._replace(bump=float(lb))
+            else:  # per-lane bumps; NaN = keep the spec's static value
+                bump_lanes = np.where(np.isnan(lb), spec.bump, lb)
 
         B = len(jobs)
         env = PackedEnvelopes.from_plans([j.plan for j in jobs])
@@ -438,9 +530,9 @@ class ClusterSim:
         # Attempt-#1 OOM probe, one batched dispatch per dt group.
         shared = shared if shared is not None else self._pack_shared(jobs)
         viol = self._initial_viol(starts, peaks, shared, B)
-        return (spec, retry_fn, starts, peaks, nseg, K, dts, lengths,
-                runtimes, summem, peak_demand, caps, cap_max, grid_rel,
-                need, bounds, viol)
+        return (spec, retry_fn, bump_lanes, starts, peaks, nseg, K, dts,
+                lengths, runtimes, summem, peak_demand, caps, cap_max,
+                grid_rel, need, bounds, viol)
 
     def _run_packed(self, jobs: List[Job], retry,
                     offset: Optional[OffsetCandidate], shared,
@@ -448,9 +540,9 @@ class ClusterSim:
         if not jobs:
             return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
                                  offset=offset)
-        (spec, retry_fn, starts, peaks, nseg, K, dts, lengths, runtimes,
-         summem, peak_demand, caps, cap_max, grid_rel, need, bounds,
-         viol) = self._prep_packed(jobs, retry, offset, shared)
+        (spec, retry_fn, bump_lanes, starts, peaks, nseg, K, dts, lengths,
+         runtimes, summem, peak_demand, caps, cap_max, grid_rel, need,
+         bounds, viol) = self._prep_packed(jobs, retry, offset, shared)
         B = len(jobs)
 
         # Mutable replay state.  attempts/wastage continue from the Job
@@ -460,7 +552,9 @@ class ClusterSim:
         wasted = np.asarray([j.wasted_gbs for j in jobs], np.float64)
         node_running: List[List[int]] = [[] for _ in self.nodes]
         admit_t = np.zeros((B,), np.float64)
-        queue: List[int] = list(range(B))
+        frontier = _DagFrontier.build(jobs)
+        queue: List[int] = (list(range(B)) if frontier is None
+                            else frontier.roots())
         events: List[Tuple[float, int, str, int, int]] = []
         seq = itertools.count()
         retries = 0
@@ -524,6 +618,8 @@ class ClusterSim:
                 wasted[ji] += (w - summem[ji]) * dts[ji]
                 area_used += summem[ji] * dts[ji]
                 done_at = max(done_at, t)
+                if frontier is not None:  # dependency-release
+                    queue.extend(frontier.release(ji))
             else:  # OOM kill
                 v = int(viol[ji])
                 w = span_alloc_sum(peaks[row], bounds[row],
@@ -534,6 +630,8 @@ class ClusterSim:
                 if attempts[ji] >= self.max_attempts or \
                         peak_demand[ji] > cap_max:
                     unschedulable += 1
+                    if frontier is not None:  # descendants can never run
+                        unschedulable += frontier.doom(ji)
                 else:
                     t_fail = v * dts[ji]
                     used = float(jobs[ji].mem[v])
@@ -541,7 +639,9 @@ class ClusterSim:
                         ns, npk = retry_packed(
                             spec, starts[row], peaks[row], nseg[row],
                             np.asarray([t_fail]), np.asarray([used]),
-                            machine_memory=cap_max)
+                            machine_memory=cap_max,
+                            bump=(None if bump_lanes is None
+                                  else bump_lanes[row]))
                         starts[ji], peaks[ji] = ns[0], npk[0]
                     else:
                         s, p = PackedEnvelopes(
@@ -609,9 +709,9 @@ class ClusterSim:
                                  offset=offset)
         from repro.sched.admission import AdmissionState
 
-        (spec, retry_fn, starts, peaks, nseg, K, dts, lengths, runtimes,
-         summem, peak_demand, caps, cap_max, grid_rel, need, bounds,
-         viol) = self._prep_packed(jobs, retry, offset, shared)
+        (spec, retry_fn, bump_lanes, starts, peaks, nseg, K, dts, lengths,
+         runtimes, summem, peak_demand, caps, cap_max, grid_rel, need,
+         bounds, viol) = self._prep_packed(jobs, retry, offset, shared)
         B = len(jobs)
 
         attempts0 = np.asarray([j.attempts for j in jobs], np.int64)
@@ -620,7 +720,9 @@ class ClusterSim:
         adm = AdmissionState(caps, K=K, G=ADMIT_GRID,
                              backend=admission_backend, use_dur=True)
         adm.add_lanes(starts, peaks, need, grid_rel, dur=runtimes)
-        queue: List[int] = list(range(B))
+        frontier = _DagFrontier.build(jobs)
+        queue: List[int] = (list(range(B)) if frontier is None
+                            else frontier.roots())
         events: List[Tuple[float, int, str, int, int]] = []
         seq = itertools.count()
         retries = 0
@@ -709,7 +811,9 @@ class ClusterSim:
                         viol[rows] * dts[rows],
                         np.asarray([float(jobs[ji].mem[viol[ji]])
                                     for ji in retry_set]),
-                        machine_memory=cap_max)
+                        machine_memory=cap_max,
+                        bump=(None if bump_lanes is None
+                              else bump_lanes[rows]))
                     starts[rows], peaks[rows] = ns, npk
                 else:
                     for ji in retry_set:
@@ -755,6 +859,8 @@ class ClusterSim:
                     wasted[ji] += (w_done[ji] - summem[ji]) * dts[ji]
                     area_used += summem[ji] * dts[ji]
                     done_at = max(done_at, t_)
+                    if frontier is not None:  # dependency-release
+                        queue.extend(frontier.release(ji))
                 else:  # OOM kill
                     wasted[ji] += w_oom[ji] * dts[ji]
                     attempts[ji] += 1
@@ -767,6 +873,8 @@ class ClusterSim:
                         queue.append(ji)
                     else:
                         unschedulable += 1
+                        if frontier is not None:  # descendants blocked
+                            unschedulable += frontier.doom(ji)
                 try_admit(t_)
 
         if write_back:

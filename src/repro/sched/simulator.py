@@ -144,7 +144,7 @@ def _aggregate_fleet(results, fleet, names, train, fam_idx):
 
 
 def evaluate_workflow(
-    wf: Workflow,
+    wf: Union[Workflow, str, object],
     *,
     seed: int,
     train_frac: float,
@@ -159,6 +159,12 @@ def evaluate_workflow(
 ) -> ExperimentResult:
     """Fit + replay one (workflow, seed, train fraction) cell.
 
+    ``wf`` may be a :class:`repro.traces.generator.Workflow`, a
+    :class:`repro.workloads.WorkflowTrace` (adapted via ``to_workflow``),
+    or a scenario *name* from the :mod:`repro.workloads.scenarios`
+    catalog (``"heavy_tail"``, ``"burst_arrival"``, ...) — built at its
+    default size with this cell's ``seed``.
+
     ``engine="fleet"`` (default) runs the replay on the batched engine —
     one jitted OOM/retry program per method over the *whole* test split;
     ``engine="oracle"`` replays execution-by-execution through
@@ -171,6 +177,11 @@ def evaluate_workflow(
     with their fit-once models.  ``refit="never"`` reproduces the offline
     result bitwise.
     """
+    if isinstance(wf, str):  # scenario-catalog name
+        from repro.workloads import scenarios
+        wf = scenarios.get(wf, seed=seed).to_workflow()
+    elif hasattr(wf, "to_workflow"):  # a workloads.WorkflowTrace
+        wf = wf.to_workflow()
     if engine not in ("fleet", "oracle"):
         raise ValueError(f"unknown engine: {engine!r}")
     if mode not in ("offline", "online"):
@@ -317,7 +328,7 @@ def evaluate_workflow(
 
 
 def run_paper_experiment(
-    wf: Workflow,
+    wf: Union[Workflow, str, object],
     *,
     seeds=range(10),
     train_fracs=(0.25, 0.50, 0.75),
@@ -330,13 +341,29 @@ def run_paper_experiment(
     refit: Union[RefitPolicy, str] = "never",
     round_size: int = 1,
 ):
-    """Fig. 6 protocol: 10 seeds × {25, 50, 75}% training data, averaged."""
+    """Fig. 6 protocol: 10 seeds × {25, 50, 75}% training data, averaged.
+
+    Like :func:`evaluate_workflow`, ``wf`` may be a scenario name (built
+    once per seed — the synthesis seed follows the cell seed) or a
+    :class:`repro.workloads.WorkflowTrace` (adapted once, shared by every
+    cell); the conversion is hoisted out of the (seed, frac) grid.
+    """
+    if isinstance(wf, str):  # one synthesis per seed, shared across fracs
+        from repro.workloads import scenarios
+        per_seed = {s: scenarios.get(wf, seed=s).to_workflow()
+                    for s in seeds}
+        wf_for = per_seed.__getitem__
+    elif hasattr(wf, "to_workflow"):  # adapt a WorkflowTrace exactly once
+        adapted = wf.to_workflow()
+        wf_for = lambda s: adapted  # noqa: E731
+    else:
+        wf_for = lambda s: wf  # noqa: E731
     out: Dict[float, Dict[str, float]] = {}
     for frac in train_fracs:
         acc: Dict[str, List[float]] = {}
         for seed in seeds:
             res = evaluate_workflow(
-                wf, seed=seed, train_frac=frac, k=k,
+                wf_for(seed), seed=seed, train_frac=frac, k=k,
                 machine_memory=machine_memory, methods=methods, dt=dt,
                 engine=engine, mode=mode, refit=refit, round_size=round_size,
             )

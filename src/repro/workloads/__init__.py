@@ -1,0 +1,46 @@
+"""Workload subsystem: synthetic generation, wfcommons import, scenarios.
+
+Three layers over one representation (:class:`WorkflowTrace` — packed
+``(B, T)`` fleet lanes + per-task metadata + DAG edges):
+
+* :mod:`repro.workloads.generate` — seeded, jax-vectorized task-family
+  recipes synthesized straight into the fleet engine's lane layout, plus
+  DAG shape builders (chains, fan-out, layered, barrier waves);
+* :mod:`repro.workloads.wfc` — wfcommons/WorkflowHub JSON instance import
+  and export with loud schema/cycle validation;
+* :mod:`repro.workloads.scenarios` — the named scenario catalog
+  (``burst_arrival``, ``heavy_tail``, ``deep_chain``, ``wide_fanout``,
+  ``hetero_dt``, ``workload_replay``) consumed by ``evaluate_workflow``,
+  the benchmarks and the tests.
+"""
+
+from repro.workloads import scenarios, wfc
+from repro.workloads.generate import (
+    SHAPES,
+    FamilyRecipe,
+    ScenarioWorkflow,
+    WorkflowTrace,
+    assert_release_order,
+    barrier_parents,
+    chain_parents,
+    fanout_parents,
+    layered_parents,
+    materialize_traces,
+    synthesize,
+)
+from repro.workloads.scenarios import SCENARIOS, register_scenario, scenario_names
+from repro.workloads.wfc import (
+    export_instance,
+    import_instance,
+    load_instance,
+    validate_dag_ids,
+)
+
+__all__ = [
+    "SHAPES", "FamilyRecipe", "WorkflowTrace", "ScenarioWorkflow",
+    "synthesize", "materialize_traces", "assert_release_order",
+    "chain_parents", "fanout_parents", "layered_parents", "barrier_parents",
+    "scenarios", "SCENARIOS", "register_scenario", "scenario_names",
+    "wfc", "load_instance", "import_instance", "export_instance",
+    "validate_dag_ids",
+]

@@ -72,6 +72,9 @@ def _hetero_dt_traces(seed=0):
 
 class TestHeterogeneousDt:
     def test_resample_branch_warns_and_selects(self):
+        from repro.core.ksplus import reset_hetero_dt_warnings
+
+        reset_hetero_dt_warnings()  # warnings dedupe per process
         mems, dts, Is = _hetero_dt_traces()
         auto = KSPlusAuto(candidates=(1, 2, 3, 4, 6))
         with pytest.warns(UserWarning, match="resampling"):
@@ -80,6 +83,9 @@ class TestHeterogeneousDt:
         assert auto.predict(4.0).is_monotone()
 
     def test_oracle_branch_warns_and_matches_uniform_choice(self):
+        from repro.core.ksplus import reset_hetero_dt_warnings
+
+        reset_hetero_dt_warnings()
         mems, dts, Is = _hetero_dt_traces()
         auto = KSPlusAuto(candidates=(1, 2, 3, 4, 6), hetero_dt="oracle")
         with pytest.warns(UserWarning, match="oracle"):

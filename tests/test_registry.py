@@ -187,12 +187,18 @@ class TestSchedulerRegistryNames:
                 _cluster_jobs(), "ks+",
                 offsets={"nonexistent": OffsetCandidate(peak=0.1)})
 
-    def test_cluster_per_family_bump_conflict(self):
-        with pytest.raises(ValueError):
-            ClusterSim([Node(0, 24.0)]).run(
-                _cluster_jobs(), "ks+",
-                offsets={"a": OffsetCandidate(last_peak_bump=0.3),
-                         "b": OffsetCandidate(last_peak_bump=0.5)})
+    def test_cluster_per_family_bumps_may_differ(self):
+        """PR 5: differing per-family last_peak_bump values fold into a
+        per-lane bump array (NaN = spec default) instead of raising; the
+        replay completes and records the per-lane candidate."""
+        res = ClusterSim([Node(0, 24.0)]).run(
+            _cluster_jobs(), "ks+",
+            offsets={"a": OffsetCandidate(last_peak_bump=0.3),
+                     "b": OffsetCandidate(last_peak_bump=0.5)})
+        assert res.offset is not None
+        bumps = np.asarray(res.offset.last_peak_bump)
+        assert bumps.ndim == 1 and {0.3, 0.5} <= set(
+            np.unique(bumps[~np.isnan(bumps)]))
 
     def test_elastic_admit_by_name_and_method(self):
         pl = ElasticPlanner()

@@ -1,0 +1,635 @@
+"""Tests for the `repro.workloads` subsystem + DAG-aware ClusterSim.
+
+Covers the PR-5 acceptance surface:
+
+* seeded-generator determinism — same seed => bitwise-identical packed
+  lanes, straight off the :class:`FleetBatch` buckets;
+* wfcommons importer — mini checked-in instance parses to the right DAG,
+  export/import round-trips, malformed graphs raise naming the task ids;
+* DAG-aware replay — fused/packed/legacy engines agree decision for
+  decision on DAG workloads, and the fused engine's placements are pinned
+  against a from-scratch topological-order oracle written here;
+* per-lane ``last_peak_bump`` — retry_packed / fleet / ClusterSim accept
+  per-family bumps and match scalar-bump oracles lane for lane;
+* hetero-dt warning dedup — one :class:`HeteroDtWarning` per process for
+  an N-family hetero-dt workload.
+"""
+
+import heapq
+import itertools
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AllocationPlan,
+    RetrySpec,
+    ksplus_retry,
+    retry_packed,
+    simulate_execution,
+    simulate_fleet,
+)
+from repro.core.ksplus import (
+    HeteroDtWarning,
+    KSPlusAuto,
+    reset_hetero_dt_warnings,
+)
+from repro.sched import ClusterSim, Job, Node, OffsetCandidate
+from repro.sched.cluster import ADMIT_GRID
+from repro.workloads import (
+    FamilyRecipe,
+    assert_release_order,
+    barrier_parents,
+    chain_parents,
+    fanout_parents,
+    layered_parents,
+    scenarios,
+    synthesize,
+    wfc,
+)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _batch_arrays(wf):
+    return [(b.idx, b.mems, b.lengths) for b in wf.batch.buckets]
+
+
+# ------------------------------------------------------------ generator
+class TestGeneratorDeterminism:
+    def test_same_seed_bitwise_identical_lanes(self):
+        a = scenarios.get("heavy_tail", n_tasks=120, seed=11)
+        b = scenarios.get("heavy_tail", n_tasks=120, seed=11)
+        for (ia, ma, la), (ib, mb, lb) in zip(_batch_arrays(a),
+                                              _batch_arrays(b)):
+            assert np.array_equal(ia, ib)
+            assert np.array_equal(la, lb)
+            assert np.array_equal(ma, mb)  # bitwise
+        assert np.array_equal(a.input_gb, b.input_gb)
+        assert a.parents == b.parents
+
+    def test_different_seed_differs(self):
+        a = scenarios.get("heavy_tail", n_tasks=60, seed=0)
+        b = scenarios.get("heavy_tail", n_tasks=60, seed=1)
+        assert not np.array_equal(a.input_gb, b.input_gb)
+
+    def test_shapes_have_their_structure(self):
+        recipes = [
+            FamilyRecipe("flat", shape="plateau", noise=0.0,
+                         mem_sigma=0.0, dur_sigma=0.0),
+            FamilyRecipe("spiky", shape="spike", noise=0.0, mem_sigma=0.0,
+                         dur_sigma=0.0, spike_gain=2.0),
+            FamilyRecipe("steps", shape="phases", noise=0.0, mem_sigma=0.0,
+                         dur_sigma=0.0, n_phases=3.0),
+        ]
+        wf = synthesize(recipes, 8, seed=0)
+        by_fam = {}
+        for i, f in enumerate(wf.families):
+            by_fam.setdefault(f, []).append(wf.mem(i))
+        for m in by_fam["flat"]:  # flat: constant
+            assert np.ptp(m) < 1e-6 * m.max()
+        for m in by_fam["spiky"]:  # spike: short excursion at ~2x
+            assert m.max() > 1.8 * np.median(m)
+        for m in by_fam["steps"]:  # phases: ascending steps
+            assert len(np.unique(np.round(m, 5))) == 3
+            assert m[0] < m[-1]
+
+    def test_input_size_scaling(self):
+        wf = synthesize(
+            [FamilyRecipe("scaled", dur_base=5.0, dur_per_gb=30.0,
+                          input_sigma=0.8, dur_sigma=0.0)], 64, seed=2)
+        order = np.argsort(wf.input_gb)
+        # durations follow input size (no duration noise in this recipe)
+        assert np.all(np.diff(wf.lengths[order]) >= 0)
+
+    def test_identical_recipes_draw_independent_tasks(self):
+        """Two recipes sharing (name, shape, dt) must not reuse RNG draws
+        — the recipe position is folded into the key."""
+        wf = synthesize(
+            [FamilyRecipe("a"), FamilyRecipe("a", mem_base=9.0)], 5, seed=0)
+        assert not np.array_equal(wf.input_gb[:5], wf.input_gb[5:])
+
+    def test_tiny_scenario_keeps_every_family(self):
+        """Degenerate n_tasks is clamped so no family silently drops."""
+        wf = scenarios.get("heavy_tail", n_tasks=1, seed=0)
+        assert set(wf.families) == {"mice", "elephants", "saw_io"}
+        assert wf.B == 3  # one task per family, never negative counts
+
+    def test_ten_k_tasks_materialize(self):
+        wf = scenarios.get("workload_replay", n_tasks=10_000, seed=0)
+        assert wf.B == 10_000
+        assert len(wf.batch.buckets) <= 4  # a few batched dispatches
+        assert sum(len(b.idx) for b in wf.batch.buckets) == 10_000
+
+
+class TestDagBuilders:
+    def test_builders_are_valid_dags(self):
+        for parents in (chain_parents(40, 4), fanout_parents(40, 8),
+                        layered_parents(40, seed=0, layer_width=8),
+                        barrier_parents(40, waves=5)):
+            ids = [str(i) for i in range(len(parents))]
+            wfc.validate_dag_ids(
+                ids, [[str(p) for p in ps] for ps in parents])
+
+    def test_chain_depth_and_fanout_width(self):
+        ch = chain_parents(12, chains=3)
+        assert ch[0] == () and ch[3] == (0,) and ch[11] == (8,)
+        fo = fanout_parents(9, fanout=8)
+        assert fo[0] == () and all(fo[i] == (0,) for i in range(1, 9))
+
+
+# ------------------------------------------------------------- wfcommons
+class TestWfcImporter:
+    def _doc(self):
+        with open(os.path.join(DATA, "mini_wfcommons.json")) as f:
+            return json.load(f)
+
+    def test_mini_instance_imports(self):
+        wf = wfc.load_instance(os.path.join(DATA, "mini_wfcommons.json"))
+        assert wf.B == 6
+        assert wf.families == ["split", "blast", "blast", "blast",
+                               "merge", "report"]
+        assert wf.parents == ((), (0,), (0,), (0,), (1, 2, 3), (4,))
+        assert list(wf.lengths) == [12, 64, 58, 71, 25, 8]
+        np.testing.assert_allclose(
+            wf.peaks(), [0.5, 4.0, 3.0, 5.0, 2.0, 0.25], rtol=1e-6)
+
+    def test_round_trip(self):
+        wf = wfc.import_instance(self._doc())
+        again = wfc.import_instance(wfc.export_instance(wf))
+        assert again.task_ids == wf.task_ids
+        assert again.parents == wf.parents
+        assert again.families == wf.families
+        assert np.array_equal(again.lengths, wf.lengths)
+        np.testing.assert_array_equal(again.peaks(), wf.peaks())
+
+    def test_legacy_layout(self):
+        doc = {"name": "legacy", "workflow": {"tasks": [
+            {"name": "a_001", "runtime": 10.0, "memory": 2 ** 30,
+             "parents": []},
+            {"name": "b_002", "runtime": 5.0, "memory": 2 ** 29,
+             "parents": ["a_001"]},
+        ]}}
+        wf = wfc.import_instance(doc)
+        assert wf.parents == ((), (0,))
+        assert wf.families == ["a", "b"]
+
+    def test_legacy_parents_by_name_with_distinct_ids(self):
+        """Legacy parents reference task *names*; ids may differ."""
+        doc = {"workflow": {"tasks": [
+            {"id": "ID01", "name": "split_001", "runtime": 10.0,
+             "memory": 2 ** 30, "parents": []},
+            {"id": "ID02", "name": "blast_002", "runtime": 5.0,
+             "memory": 2 ** 29, "parents": ["split_001"]},
+        ]}}
+        wf = wfc.import_instance(doc)
+        assert wf.task_ids == ["ID01", "ID02"]
+        assert wf.parents == ((), (0,))
+
+    def test_missing_measurements_raise(self):
+        doc = self._doc()
+        doc["workflow"]["execution"]["tasks"].pop(2)  # drop one entry
+        with pytest.raises(ValueError,
+                           match="runtime/memory.*blast_00000003"):
+            wfc.import_instance(doc)
+        legacy = {"workflow": {"tasks": [
+            {"name": "a_001", "parents": []}]}}  # no runtime/memory
+        with pytest.raises(ValueError, match="runtime.*a_001"):
+            wfc.import_instance(legacy)
+
+    def test_cycle_raises_with_ids(self):
+        doc = self._doc()
+        tasks = doc["workflow"]["specification"]["tasks"]
+        tasks[0]["parents"] = ["report_00000006"]  # close the loop
+        with pytest.raises(ValueError, match="cycle.*split_00000001"):
+            wfc.import_instance(doc)
+
+    def test_self_parent_raises_with_id(self):
+        doc = self._doc()
+        doc["workflow"]["specification"]["tasks"][1]["parents"] = [
+            "blast_00000002"]
+        with pytest.raises(ValueError, match="own parent.*blast_00000002"):
+            wfc.import_instance(doc)
+
+    def test_unknown_parent_raises(self):
+        doc = self._doc()
+        doc["workflow"]["specification"]["tasks"][1]["parents"] = ["nope"]
+        with pytest.raises(ValueError, match="unknown parent.*nope"):
+            wfc.import_instance(doc)
+
+    def test_duplicate_ids_raise(self):
+        doc = self._doc()
+        tasks = doc["workflow"]["specification"]["tasks"]
+        tasks[2]["id"] = tasks[1]["id"]
+        with pytest.raises(ValueError, match="duplicate.*blast_00000002"):
+            wfc.import_instance(doc)
+
+    def test_not_an_instance_raises(self):
+        with pytest.raises(ValueError, match="missing 'workflow'"):
+            wfc.import_instance({"nope": 1})
+        with pytest.raises(ValueError, match="specification"):
+            wfc.import_instance({"workflow": {}})
+
+
+# --------------------------------------------------- ClusterSim validation
+def _tiny_job(jid, parents=(), peak=4.0, L=10):
+    return Job(jid=jid, family="t", input_gb=1.0,
+               mem=np.full(L, 1.0), dt=1.0,
+               plan=AllocationPlan(np.zeros(1), np.asarray([peak])),
+               est_runtime=float(L), parents=tuple(parents))
+
+
+class TestClusterDagValidation:
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_self_parent_rejected_loudly(self, engine):
+        jobs = [_tiny_job(0), _tiny_job(7, parents=(7,))]
+        sim = ClusterSim([Node(0, 16.0)], engine=engine)
+        with pytest.raises(ValueError, match=r"own parent.*\[7\]"):
+            sim.run(jobs, RetrySpec("ksplus"))
+
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_cycle_rejected_loudly(self, engine):
+        jobs = [_tiny_job(0, parents=(1,)), _tiny_job(1, parents=(0,)),
+                _tiny_job(2)]
+        sim = ClusterSim([Node(0, 16.0)], engine=engine)
+        with pytest.raises(ValueError, match=r"cycle.*\[0, 1\]"):
+            sim.run(jobs, RetrySpec("ksplus"))
+
+    def test_unknown_parent_rejected(self):
+        jobs = [_tiny_job(0), _tiny_job(1, parents=(42,))]
+        with pytest.raises(ValueError, match="unknown parent.*42"):
+            ClusterSim([Node(0, 16.0)]).run(jobs, RetrySpec("ksplus"))
+
+    def test_duplicate_jids_rejected_when_dag(self):
+        jobs = [_tiny_job(3), _tiny_job(3), _tiny_job(4, parents=(3,))]
+        with pytest.raises(ValueError, match=r"duplicate.*\[3\]"):
+            ClusterSim([Node(0, 16.0)]).run(jobs, RetrySpec("ksplus"))
+
+    def test_parent_free_jobs_unchanged(self):
+        """No parents anywhere -> the historical no-frontier behavior."""
+        jobs = [_tiny_job(i) for i in range(4)]
+        res = ClusterSim([Node(0, 16.0)]).run(jobs, RetrySpec("ksplus"))
+        assert len(res.placements) == 4
+        assert res.placements[0][0] == 0.0
+
+
+# -------------------------------------------------- DAG replay differential
+def _dag_jobs(scenario, n, seed=0, under_frac=0.25):
+    wf = scenarios.get(scenario, n_tasks=n, seed=seed)
+    return wf.to_jobs(under_frac=under_frac, seed=seed)
+
+
+def _nodes():
+    return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0)]
+
+
+def _topo_oracle(jobs, caps, retry_fn, max_attempts=20):
+    """From-scratch topological-order replay oracle.
+
+    Independent of ClusterSim's engines: explicit topological release
+    bookkeeping, per-decision recomputation of node residuals with
+    :func:`repro.core.alloc_at`, greedy first-fit in (queue, node) order,
+    an event heap with submission-order tie-breaks.  Returns the
+    placement log (t, node, jid) plus retry/unschedulable counts.
+    """
+    from repro.core import alloc_at, first_violation
+
+    index = {j.jid: i for i, j in enumerate(jobs)}
+    pend = [len(set(j.parents)) for j in jobs]
+    children = [[] for _ in jobs]
+    for i, j in enumerate(jobs):
+        for p in dict.fromkeys(j.parents):
+            children[index[p]].append(i)
+    dead = [False] * len(jobs)
+    plans = [j.plan for j in jobs]
+    attempts = [0] * len(jobs)
+    running = [[] for _ in caps]          # (start_t, job index)
+    ready = [i for i in range(len(jobs)) if pend[i] == 0]
+    events = []
+    seq = itertools.count()
+    placements, retries, unschedulable = [], 0, 0
+
+    def fits(ni, i, now):
+        horizon = now + np.linspace(0, jobs[i].est_runtime, ADMIT_GRID)
+        used = np.zeros_like(horizon)
+        for (s, r) in running[ni]:
+            rel = horizon - s
+            active = (rel >= 0) & (rel < jobs[r].runtime + 1e-9)
+            used += np.where(active, alloc_at(plans[r], np.maximum(rel, 0)),
+                             0.0)
+        need = alloc_at(plans[i],
+                        np.linspace(0, jobs[i].est_runtime, ADMIT_GRID))
+        return bool(np.all(need <= caps[ni] - used + 1e-9))
+
+    def admit(now):
+        progressed = True
+        while progressed and ready:
+            progressed = False
+            for i in list(ready):
+                for ni in range(len(caps)):
+                    if fits(ni, i, now):
+                        ready.remove(i)
+                        running[ni].append((now, i))
+                        placements.append((float(now), ni, jobs[i].jid))
+                        v = first_violation(plans[i], jobs[i].mem,
+                                            jobs[i].dt)
+                        end = (now + jobs[i].runtime if v < 0
+                               else now + v * jobs[i].dt)
+                        heapq.heappush(
+                            events, (end, next(seq),
+                                     "done" if v < 0 else "oom", ni, i))
+                        progressed = True
+                        break
+
+    admit(0.0)
+    while events:
+        t, _, kind, ni, i = heapq.heappop(events)
+        running[ni] = [(s, r) for s, r in running[ni] if r != i]
+        if kind == "done":
+            for c in children[i]:
+                pend[c] -= 1
+                if pend[c] == 0 and not dead[c]:
+                    ready.append(c)
+        else:
+            attempts[i] += 1
+            retries += 1
+            if attempts[i] >= max_attempts or \
+                    float(np.max(jobs[i].mem)) > max(caps):
+                unschedulable += 1
+                stack = list(children[i])
+                while stack:
+                    c = stack.pop()
+                    if not dead[c]:
+                        dead[c] = True
+                        unschedulable += 1
+                        stack.extend(children[c])
+            else:
+                v = first_violation(plans[i], jobs[i].mem, jobs[i].dt)
+                plans[i] = retry_fn(plans[i], v * jobs[i].dt,
+                                    float(jobs[i].mem[v]))
+                ready.append(i)
+        admit(t)
+    return placements, retries, unschedulable
+
+
+class TestDagReplayDifferential:
+    @pytest.mark.parametrize("scenario", ["burst_arrival", "deep_chain",
+                                          "wide_fanout"])
+    def test_engines_agree_on_dag_workloads(self, scenario):
+        legacy = ClusterSim(_nodes(), engine="legacy").run(
+            _dag_jobs(scenario, 120), ksplus_retry)
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            _dag_jobs(scenario, 120), RetrySpec("ksplus"))
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _dag_jobs(scenario, 120), RetrySpec("ksplus"))
+        assert legacy.retries > 0  # workload exercises OOM under a DAG
+        for res in (packed, fused):
+            assert res.placements == legacy.placements
+            assert res.retries == legacy.retries
+            assert res.unschedulable == legacy.unschedulable
+            assert res.makespan == legacy.makespan
+            np.testing.assert_allclose(
+                res.total_wastage_gbs, legacy.total_wastage_gbs, rtol=1e-6)
+
+    def test_fused_matches_topological_oracle(self):
+        jobs = _dag_jobs("burst_arrival", 150, seed=4)
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            _dag_jobs("burst_arrival", 150, seed=4), RetrySpec("ksplus"))
+        caps = [n.capacity_gb for n in _nodes()]
+        oracle_pl, oracle_re, oracle_un = _topo_oracle(
+            jobs, caps, ksplus_retry)
+        oracle = [(t, _nodes()[ni].nid, jid) for t, ni, jid in oracle_pl]
+        assert fused.placements == oracle
+        assert fused.retries == oracle_re
+        assert fused.unschedulable == oracle_un
+
+    def test_release_order_enforced(self):
+        wf = scenarios.get("wide_fanout", n_tasks=100, seed=2)
+        jobs = wf.to_jobs(under_frac=0.2, seed=2)
+        res = ClusterSim(_nodes(), engine="fused").run(
+            jobs, RetrySpec("ksplus"))
+        assert_release_order(jobs, res.placements)
+        # root placed first, alone; nothing else until it finishes
+        first_t = res.placements[0][0]
+        assert [p for p in res.placements if p[0] == first_t] == \
+            [res.placements[0]]
+
+    def test_release_order_checker_catches_violations(self):
+        jobs = [_tiny_job(0, L=10), _tiny_job(1, parents=(0,), L=10)]
+        with pytest.raises(AssertionError, match="before"):
+            assert_release_order(jobs, [(0.0, 0, 0), (5.0, 0, 1)])
+        with pytest.raises(AssertionError, match="never"):
+            assert_release_order(jobs, [(0.0, 0, 1)])
+
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_doomed_descendants_counted(self, engine):
+        """An unsatisfiable root dooms its chain: every descendant counts
+        unschedulable and is never placed — identically on all engines."""
+        big = _tiny_job(0, peak=8.0, L=12)
+        big.mem = np.full(12, 100.0)  # above every node's capacity
+        chain = [big] + [_tiny_job(i, parents=(i - 1,), L=8)
+                         for i in range(1, 5)]
+        free = [_tiny_job(10 + i, L=6) for i in range(3)]
+        retry = (ksplus_retry if engine == "legacy"
+                 else RetrySpec("ksplus"))
+        res = ClusterSim(_nodes(), engine=engine).run(chain + free, retry)
+        assert res.unschedulable == 5  # the root + 4 doomed descendants
+        placed = {jid for _, _, jid in res.placements}
+        assert placed == {0, 10, 11, 12}  # chain tail never admitted
+
+    def test_offset_sweep_on_dag_workload(self):
+        """Offset sweeps and DAG release compose (fresh frontier per
+        candidate)."""
+        jobs = _dag_jobs("deep_chain", 80, seed=1)
+        results = ClusterSim(_nodes()).run(
+            jobs, RetrySpec("ksplus"),
+            offsets=[OffsetCandidate(), OffsetCandidate(peak=0.10)])
+        assert len(results) == 2
+        base = ClusterSim(_nodes()).run(
+            _dag_jobs("deep_chain", 80, seed=1), RetrySpec("ksplus"))
+        assert results[0].placements == base.placements
+
+
+# ----------------------------------------------------------- per-lane bump
+class TestPerLaneBump:
+    def _packed_plans(self, B, seed=0):
+        rng = np.random.default_rng(seed)
+        starts = np.sort(rng.uniform(0, 50, (B, 3)), axis=1)
+        starts[:, 0] = 0.0
+        peaks = np.sort(rng.uniform(1, 8, (B, 3)), axis=1)
+        nseg = np.full((B,), 3, np.int64)
+        return starts, peaks, nseg
+
+    def test_retry_packed_per_lane_bump_matches_scalar_loop(self):
+        B = 16
+        starts, peaks, nseg = self._packed_plans(B)
+        rng = np.random.default_rng(1)
+        t_fail = rng.uniform(40, 60, B)  # fails inside the last segment
+        used = rng.uniform(5, 9, B)
+        bump = rng.uniform(0.1, 0.9, B)
+        ns, np_ = retry_packed(RetrySpec("ksplus"), starts, peaks, nseg,
+                               t_fail, used, bump=bump)
+        for i in range(B):
+            si, pi = retry_packed(
+                RetrySpec("ksplus", bump=float(bump[i])),
+                starts[i:i + 1], peaks[i:i + 1], nseg[i:i + 1],
+                t_fail[i:i + 1], used[i:i + 1])
+            np.testing.assert_array_equal(ns[i], si[0])
+            np.testing.assert_array_equal(np_[i], pi[0])
+
+    def test_fleet_bump_lanes_match_per_execution_oracle(self):
+        rng = np.random.default_rng(3)
+        B, L = 24, 40
+        mems, plans, bumps = [], [], []
+        for i in range(B):
+            lo, hi = rng.uniform(1, 2), rng.uniform(4, 7)
+            split = int(rng.uniform(0.4, 0.7) * L)
+            mem = np.concatenate([np.full(split, lo), np.full(L - split, hi)])
+            mems.append(mem)
+            # under-allocate the last segment so the ksplus bump matters
+            plans.append(AllocationPlan(
+                np.asarray([0.0, float(max(split - 1, 1))]),
+                np.asarray([lo * 1.1, hi * 0.8])))
+            bumps.append(float(rng.choice([0.15, 0.45, 0.9])))
+        bumps = np.asarray(bumps)
+        fr = simulate_fleet(plans, RetrySpec("ksplus"), mems, 1.0,
+                            machine_memory=64.0, bump_lanes=bumps)
+        for i in range(B):
+            res = simulate_execution(
+                plans[i],
+                lambda p, t, u, _b=bumps[i]: ksplus_retry(
+                    p, t, u, last_peak_bump=_b),
+                mems[i], 1.0, machine_memory=64.0)
+            assert fr.attempts[i] == res.num_retries + 1
+            assert fr.succeeded[i] == res.succeeded
+            np.testing.assert_allclose(fr.wastage_gbs[i], res.wastage_gbs,
+                                       rtol=2e-5)
+        assert fr.retries.sum() > 0
+
+    def _two_family_jobs(self, seed=0):
+        rng = np.random.default_rng(seed)
+        jobs = []
+        for j in range(40):
+            L = int(rng.integers(20, 60))
+            split = int(rng.uniform(0.4, 0.7) * L)
+            lo, hi = rng.uniform(1.5, 3.0), rng.uniform(5.0, 10.0)
+            mem = np.concatenate([np.full(split, lo), np.full(L - split, hi)])
+            under = rng.uniform() < 0.4
+            plan = AllocationPlan(
+                np.asarray([0.0, max(split - 2.0, 1.0)]),
+                np.asarray([lo * 1.15, hi * (0.9 if under else 1.12)]))
+            jobs.append(Job(jid=j, family=("a" if j % 2 else "b"),
+                            input_gb=1.0, mem=mem, dt=1.0, plan=plan,
+                            est_runtime=float(L)))
+        return jobs
+
+    def test_cluster_family_bumps_may_disagree(self):
+        """Per-family offsets with different last_peak_bump values run in
+        ONE replay and agree across the packed and fused engines."""
+        mapping = {"a": OffsetCandidate(last_peak_bump=0.9),
+                   "b": OffsetCandidate(peak=0.05, last_peak_bump=0.15)}
+        packed = ClusterSim(_nodes(), engine="packed").run(
+            self._two_family_jobs(), RetrySpec("ksplus"), offsets=mapping)
+        fused = ClusterSim(_nodes(), engine="fused").run(
+            self._two_family_jobs(), RetrySpec("ksplus"), offsets=mapping)
+        assert packed.retries > 0
+        assert fused.placements == packed.placements
+        assert fused.retries == packed.retries
+        np.testing.assert_allclose(fused.total_wastage_gbs,
+                                   packed.total_wastage_gbs, rtol=1e-9)
+
+    def test_uniform_family_bump_equals_scalar_candidate(self):
+        """A mapping whose bumps all agree reproduces the scalar-bump
+        sweep path decision for decision."""
+        mapping = {"a": OffsetCandidate(last_peak_bump=0.5),
+                   "b": OffsetCandidate(last_peak_bump=0.5)}
+        via_map = ClusterSim(_nodes()).run(
+            self._two_family_jobs(), RetrySpec("ksplus"), offsets=mapping)
+        via_scalar = ClusterSim(_nodes()).run(
+            self._two_family_jobs(), RetrySpec("ksplus"),
+            offsets=[OffsetCandidate(last_peak_bump=0.5)])[0]
+        assert via_map.placements == via_scalar.placements
+        assert via_map.retries == via_scalar.retries
+        np.testing.assert_allclose(via_map.total_wastage_gbs,
+                                   via_scalar.total_wastage_gbs, rtol=1e-12)
+
+    def test_tune_offset_map_feeds_cluster(self):
+        from repro.core import KSPlus, registry
+
+        wf = scenarios.get("heavy_tail", n_tasks=60, seed=5)
+        data, fitted = {}, {}
+        for fam in set(wf.families):
+            idx = [i for i, f in enumerate(wf.families) if f == fam]
+            mems = [wf.mem(i) for i in idx]
+            dts = [wf.dts[i] for i in idx]
+            inputs = [wf.input_gb[i] for i in idx]
+            m = KSPlus(k=3)
+            m.fit(mems, dts, inputs)
+            fitted[fam], data[fam] = m, (mems, dts, inputs)
+        mapping = registry.tune_offset_map(fitted, data,
+                                           machine_memory=64.0)
+        assert set(mapping) == set(fitted)
+        res = ClusterSim(_nodes()).run(
+            wf.to_jobs(under_frac=0.2, seed=5), RetrySpec("ksplus"),
+            offsets=mapping)
+        assert res.offset is not None  # per-lane candidate applied
+
+
+# ------------------------------------------------- hetero-dt warning dedup
+class TestHeteroDtWarningDedup:
+    def test_one_warning_for_many_family_fits(self):
+        wf = scenarios.get("hetero_dt", n_tasks=64, seed=0)
+        idx = [i for i, f in enumerate(wf.families) if f == "mixed"]
+        mems = [wf.mem(i) for i in idx]
+        dts = [float(wf.dts[i]) for i in idx]
+        inputs = [float(wf.input_gb[i]) for i in idx]
+        assert len(set(dts)) > 1  # the scenario really mixes dts
+        reset_hetero_dt_warnings()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            for _ in range(5):  # five per-family fits, one situation
+                auto = KSPlusAuto(candidates=(2, 3))
+                auto.fit(mems, dts, inputs)
+        hetero = [w for w in rec if issubclass(w.category, HeteroDtWarning)]
+        assert len(hetero) == 1
+        # re-armed after reset
+        reset_hetero_dt_warnings()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            KSPlusAuto(candidates=(2, 3)).fit(mems, dts, inputs)
+        assert sum(issubclass(w.category, HeteroDtWarning)
+                   for w in rec) == 1
+
+
+# ----------------------------------------------- evaluate_workflow adapter
+class TestScenarioEvaluation:
+    def test_workflow_trace_evaluates(self):
+        from repro.sched import evaluate_workflow
+
+        wf = scenarios.get("heavy_tail", n_tasks=90, seed=0)
+        res = evaluate_workflow(wf, seed=0, train_frac=0.5,
+                                methods=["ks+", "default"])
+        assert res.workflow == "heavy_tail"
+        assert set(res.methods) == {"ks+", "default"}
+        assert res.methods["ks+"].total_gbs > 0
+        assert set(res.methods["ks+"].per_family_gbs) == set(wf.families)
+
+    def test_scenario_names_resolve(self):
+        assert set(scenarios.scenario_names()) >= {
+            "burst_arrival", "heavy_tail", "deep_chain", "wide_fanout",
+            "hetero_dt", "workload_replay"}
+        with pytest.raises(KeyError, match="unknown scenario"):
+            scenarios.get("nope")
+
+    def test_split_is_seeded_and_disjoint(self):
+        wf = scenarios.get("heavy_tail", n_tasks=60, seed=0).to_workflow()
+        tr1, te1 = wf.split(3, 0.5)
+        tr2, te2 = wf.split(3, 0.5)
+        for f in tr1:
+            assert len(tr1[f]) == len(tr2[f])
+            assert len(tr1[f]) + len(te1[f]) == len(tr1[f] + te1[f])
+            ids1 = [id(e) for e in tr1[f]]
+            assert ids1 == [id(e) for e in tr2[f]]
