@@ -625,6 +625,133 @@ def bench_workload_replay(full: bool):
         }, f, indent=1)
 
 
+# --------------------------------------------------------------- churn_replay
+def bench_churn_replay(full: bool):
+    """Fused fault path vs the no-fault fused replay, plus the robustness
+    suite's differential guarantee.
+
+    Three measurements, dumped into BENCH_churn.json:
+
+    * fault-path overhead — a seeded 1k-job workload replayed through the
+      fused engine with and without a Poisson churn schedule; the faulted
+      replay must stay within 2x of the no-fault replay (the eviction
+      path reuses AdmissionState's join/leave row protocol, so churn adds
+      bookkeeping, not dispatches);
+    * oracle check — a ~300-job storm-over-DAG replay (preemption storm
+      with dependency chains) through fused AND legacy, placements
+      asserted bitwise;
+    * suite smoke — three make_suite grid points (storm, churn, arrivals)
+      with ``check_oracle=True``.
+    """
+    import numpy as _np
+
+    from repro.core import AllocationPlan, RetrySpec, ksplus_retry
+    from repro.sched import ClusterSim, FaultSchedule, Job, Node
+    from repro.workloads import SuiteCase, run_suite
+
+    def nodes():
+        return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0), Node(3, 96.0)]
+
+    def build_jobs(n_jobs, seed=0, parents_every=0):
+        rng = _np.random.default_rng(seed)
+        jobs = []
+        for j in range(n_jobs):
+            L = int(rng.integers(24, 90))
+            split = int(rng.uniform(0.4, 0.8) * L)
+            lo = float(rng.uniform(1.5, 3.0))
+            hi = float(rng.uniform(5.0, 11.0))
+            mem = _np.concatenate([_np.full(split, lo),
+                                   _np.full(L - split, hi)])
+            mem = mem * (1.0 + 0.02 * _np.sin(_np.arange(L)))
+            scale = 0.9 if rng.uniform() < 0.2 else 1.12
+            plan = AllocationPlan(
+                starts=_np.asarray([0.0, max(split - 2.0, 1.0)]),
+                peaks=_np.asarray([lo * 1.15, hi * scale]))
+            parents = ((j - parents_every,) if parents_every
+                       and j >= parents_every else ())
+            jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
+                            dt=1.0, plan=plan, est_runtime=float(L),
+                            parents=parents))
+        return jobs
+
+    n_jobs = 1000
+    churn = FaultSchedule.node_churn(nodes(), rate=1.0 / 60.0,
+                                     horizon=2000.0, seed=0,
+                                     mean_down=45.0)
+
+    def fused_plain():
+        return ClusterSim(nodes(), engine="fused").run(
+            build_jobs(n_jobs), RetrySpec("ksplus"))
+
+    def fused_churn():
+        return ClusterSim(nodes(), engine="fused").run(
+            build_jobs(n_jobs), RetrySpec("ksplus"), faults=churn)
+
+    pres, us_plain = _timed(fused_plain, repeat=3)
+    cres, us_churn = _timed(fused_churn, repeat=3)
+    overhead = us_churn / us_plain
+    assert cres.evictions > 0, "churn schedule produced no evictions"
+    assert overhead <= 2.0, \
+        f"fused fault path regressed: {overhead:.2f}x the no-fault " \
+        f"replay (contract: <=2x at {n_jobs} jobs)"
+
+    # Oracle check: preemption storm over a chained DAG, ~300 jobs.
+    n_mid = 300
+    storm = FaultSchedule.preemption_storm(
+        nodes(), t=60.0, frac=0.5, seed=1, down_time=90.0, window=20.0)
+    fres = ClusterSim(nodes(), engine="fused").run(
+        build_jobs(n_mid, seed=1, parents_every=50), RetrySpec("ksplus"),
+        faults=storm)
+    t0 = time.perf_counter()
+    lres = ClusterSim(nodes(), engine="legacy").run(
+        build_jobs(n_mid, seed=1, parents_every=50), ksplus_retry,
+        faults=storm)
+    us_l = (time.perf_counter() - t0) * 1e6
+    assert fres.placements == lres.placements, \
+        "fused fault path diverged from the legacy oracle"
+    assert fres.evictions == lres.evictions
+    assert fres.doomed == lres.doomed
+    assert fres.unschedulable == lres.unschedulable
+
+    # Suite smoke grid (fused vs legacy per case).
+    smoke = [SuiteCase("burst_arrival", "poisson", "storm", seed=0),
+             SuiteCase("deep_chain", "none", "churn", seed=0),
+             SuiteCase("wide_fanout", "diurnal", "storm", seed=0)]
+    t0 = time.perf_counter()
+    rows = run_suite(smoke, nodes=nodes, n_tasks=96 if full else 48,
+                     check_oracle=True)
+    us_suite = (time.perf_counter() - t0) * 1e6
+    total_evict = sum(r["evictions"] for r in rows)
+
+    _row("churn_replay_overhead", us_churn,
+         f"{overhead:.2f}x no-fault fused (target <=2x, {n_jobs} jobs, "
+         f"{cres.evictions} evictions, {len(churn)} fault events)")
+    _row("churn_replay_plain_us", us_plain,
+         f"makespan {pres.makespan:.0f}s, {pres.retries} retries")
+    _row("churn_replay_storm_oracle_us", us_l,
+         f"fused bitwise vs legacy ({n_mid} jobs, {lres.evictions} "
+         f"evictions, {lres.doomed} doomed)")
+    _row("churn_replay_suite_us", us_suite,
+         f"{len(rows)} smoke cases, oracle-checked, "
+         f"{total_evict} evictions")
+    with open("BENCH_churn.json", "w") as f:
+        json.dump({
+            "churn_replay_jobs": n_jobs,
+            "churn_replay_overhead_x": overhead,
+            "churn_replay_plain_us": us_plain,
+            "churn_replay_churn_us": us_churn,
+            "churn_replay_evictions": cres.evictions,
+            "churn_replay_fault_events": len(churn),
+            "churn_replay_storm_jobs": n_mid,
+            "churn_replay_storm_evictions": lres.evictions,
+            "churn_replay_storm_doomed": lres.doomed,
+            "churn_replay_storm_bitwise": True,
+            "churn_replay_suite_cases": len(rows),
+            "churn_replay_suite_oracle_ok": True,
+            "churn_replay_suite_rows": rows,
+        }, f, indent=1)
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(full: bool):
     """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
@@ -713,6 +840,7 @@ BENCHES = {
     "cluster_sim": bench_cluster_sim,
     "admission": bench_admission,
     "workload_replay": bench_workload_replay,
+    "churn_replay": bench_churn_replay,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }

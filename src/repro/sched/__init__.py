@@ -9,6 +9,7 @@ from repro.sched.cluster import (
     OffsetCandidate,
 )
 from repro.sched.elastic import ElasticPlanner, plan_mesh
+from repro.sched.faults import FaultEvent, FaultSchedule
 from repro.sched.monitor import HBMFootprintModel, MemoryMonitor, read_rss_gb
 from repro.sched.simulator import (
     ExperimentResult,
@@ -22,6 +23,7 @@ __all__ = [
     "AdmissionState",
     "ClusterResult", "ClusterSim", "Job", "Node", "OffsetCandidate",
     "ElasticPlanner", "plan_mesh",
+    "FaultEvent", "FaultSchedule",
     "HBMFootprintModel", "MemoryMonitor", "read_rss_gb",
     "ExperimentResult", "MethodResult", "default_methods",
     "evaluate_workflow", "run_paper_experiment",

@@ -54,6 +54,19 @@ every lane up front but only passes *released* lanes (all parents
 finished) to :meth:`AdmissionState.columns`, so dependency structure
 costs nothing here — unreleased lanes simply never enter a refresh.  The
 ``workload_replay`` benchmark drives this path with a ≥5k-task DAG.
+
+The join/leave row protocol (:meth:`AdmissionState.add_node` /
+:meth:`remove_node`) is what both churn consumers share:
+``ElasticPlanner`` drives it for slice membership, and ``ClusterSim``'s
+fault path drives it for ``FaultSchedule`` leave/join events —
+``remove_node`` returns the dead node's resident lanes *in admission
+order*, which is the eviction order every engine pins bitwise.  Node
+rows are positional (a leave splices, a join appends); callers keep
+their own stable-id ↔ row mapping.  Because the fused dispatch takes
+``caps`` and the resident-lane index per call, churn needs no
+device-state rebuild: dropping a row just drops it from the next
+dispatch's operands, keeping the engine one-dispatch-per-refresh under
+faults (``churn_replay`` benchmark).
 """
 
 from __future__ import annotations

@@ -71,6 +71,33 @@ All three engines drive the same dependency-release frontier
 failure (unsatisfiable / out of attempts) counts every not-yet-released
 descendant as unschedulable.  Cycles, self-parents, duplicate and unknown
 job ids are rejected loudly at submit time with the offending ids named.
+
+Arrivals and faults: jobs may carry ``release_time`` (no engine admits a
+job before it; a child released before its parents finish simply waits
+for them), and ``run(faults=...)`` injects a
+:class:`repro.sched.faults.FaultSchedule` of node leave/join events into
+all three engines.  A leave evicts the node's residents in admission
+order — each evicted job's allocated area up to the eviction time counts
+as wastage, its attempt counter advances against the same
+``max_attempts`` budget as OOM retries (``ClusterResult.evictions``
+breaks the count out), and it requeues ahead of other waiters; running
+out of attempts through evictions dooms DAG descendants exactly like an
+OOM (``ClusterResult.doomed``).  Jobs the surviving fleet can never fit
+park in a starvation-tracked side queue and re-enter on the next join
+(``ClusterResult.starved`` / ``starvation_s``).  Unknown-node leaves
+raise ``KeyError`` and joins of active nodes raise ``ValueError``, both
+naming the node.  Oversized attempt-1 plans are rejected at submit time.
+
+Eviction precision contract: eviction *decisions* (victim order, requeue
+position, attempt/doom accounting, subsequent placements) are bitwise
+across engines — they involve no new arithmetic, only the shared event
+protocol.  Eviction *wastage* is the plan's area over the whole samples
+elapsed since admission: the batched engines evaluate it with the same
+O(K) span arithmetic as done/OOM wastage, the legacy loop with
+per-sample float64 sums — within 1e-6 relative, the existing wastage
+contract.  Under faults, ``avg_utilization``'s denominator becomes the
+piecewise-constant capacity integral; without them it stays the
+closed-form product, bit-for-bit the pre-fault result.
 """
 
 from __future__ import annotations
@@ -98,12 +125,35 @@ from repro.core.envelope import (
     span_alloc_sum,
 )
 from repro.core.retry import apply_retry_spec
+from repro.sched.faults import FaultEvent, FaultSchedule
 
-__all__ = ["Job", "Node", "ClusterSim", "ClusterResult", "OffsetCandidate"]
+__all__ = ["Job", "Node", "ClusterSim", "ClusterResult", "OffsetCandidate",
+           "FaultEvent", "FaultSchedule"]
 
 ADMIT_GRID = 64  # samples on the admission horizon (both engines)
 
 RetryFn = Callable[[AllocationPlan, float, float], AllocationPlan]
+
+
+def _norm_faults(faults) -> Tuple[FaultEvent, ...]:
+    """Normalize a ``faults`` argument into a stably time-sorted tuple."""
+    if faults is None:
+        return ()
+    if isinstance(faults, FaultSchedule):
+        return faults.events
+    events = tuple(faults)
+    for e in events:
+        if not isinstance(e, FaultEvent):
+            raise TypeError(f"not a FaultEvent: {e!r}")
+    return tuple(sorted(events, key=lambda e: e.t))
+
+
+def _elapsed_samples(t: float, t0: float, dt: float, length: int) -> int:
+    """Whole trace samples a job occupied between admission at ``t0`` and
+    eviction at ``t`` — the span its eviction wastage covers.  Identical
+    float arithmetic in every engine (the differential contract)."""
+    return min(int(np.floor((float(t) - float(t0)) / float(dt) + 1e-9)),
+               int(length))
 
 
 @dataclasses.dataclass
@@ -120,6 +170,11 @@ class Job:
     # Workflow DAG edges: jids of jobs that must *finish* before this one
     # becomes admissible (empty = released at t=0, the historical behavior).
     parents: Tuple[int, ...] = ()
+    # Absolute submission time: the job enters the admission queue at
+    # max(release_time, all parents finished).  0.0 = the historical
+    # released-at-start behavior; see repro.workloads.arrivals for seeded
+    # arrival processes.
+    release_time: float = 0.0
 
     @property
     def runtime(self) -> float:
@@ -224,6 +279,13 @@ class ClusterResult:
     # differential test and the cluster_sim benchmark compare these bitwise.
     placements: Optional[List[Tuple[float, int, int]]] = None
     offset: Optional[OffsetCandidate] = None
+    # Fault-injection accounting (all zero without a FaultSchedule):
+    evictions: int = 0       # jobs killed by node departures
+    doomed: int = 0          # DAG descendants of permanent failures
+    #   (already included in ``unschedulable``; broken out for the suite)
+    starved: int = 0         # jobs never finished nor failed (parked/queued)
+    starvation_s: float = 0.0  # total time jobs spent parked (unfittable)
+    finished: int = 0        # jobs that ran to completion
 
 
 def _as_spec(retry) -> Tuple[Optional[RetrySpec], Optional[RetryFn]]:
@@ -262,9 +324,35 @@ class ClusterSim:
         self.engine = engine
 
     # ------------------------------------------------------------------ API
+    def _validate_submit(self, jobs: List[Job]) -> None:
+        """Fail fast, loudly, at submit time.
+
+        A job whose attempt-1 plan peak exceeds the largest node's
+        capacity can never be placed — rejecting it here (naming the job
+        ids) beats discovering a permanent failure mid-replay.  Release
+        times must be finite and non-negative.
+        """
+        if not self.nodes:
+            raise ValueError("cluster has no nodes")
+        cap0 = max(n.capacity_gb for n in self.nodes)
+        bad = [job.jid for job in jobs
+               if float(np.max(job.plan.peaks)) > cap0 + 1e-9]
+        if bad:
+            raise ValueError(
+                f"unschedulable at submit: attempt-1 plan peak exceeds the "
+                f"largest node capacity ({cap0:g} GB) for job ids {bad}")
+        bad = [job.jid for job in jobs
+               if not np.isfinite(job.release_time)
+               or job.release_time < 0.0]
+        if bad:
+            raise ValueError(
+                f"release_time must be finite and >= 0 for job ids {bad}")
+
     def run(self, jobs: List[Job], retry,
             offsets: Union[None, str, Dict[str, OffsetCandidate],
-                           Sequence[OffsetCandidate]] = None
+                           Sequence[OffsetCandidate]] = None,
+            faults: Union[None, FaultSchedule,
+                          Sequence[FaultEvent]] = None
             ) -> Union[ClusterResult, List[ClusterResult]]:
         """Replay ``jobs`` through the cluster; see the module docstring.
 
@@ -281,29 +369,40 @@ class ClusterSim:
         applies *per-task-family* candidates (e.g. the output of
         :func:`repro.core.registry.tune_offset` per family) in one replay —
         families absent from the mapping run at identity.
+
+        ``faults`` injects a :class:`repro.sched.faults.FaultSchedule`
+        (or a plain event sequence) of node leave/join events; all three
+        engines replay it identically — evictions, requeue-with-backoff,
+        doomed-descendant accounting and starvation parking included.
         """
+        faults = _norm_faults(faults)
+        self._validate_submit(jobs)
         if self.engine == "legacy":
             if offsets is not None:
                 raise ValueError("offset sweeps require a batched engine")
-            return self._run_legacy(jobs, retry)
+            return self._run_legacy(jobs, retry, faults)
         run_one = (self._run_fused if self.engine == "fused"
                    else self._run_packed)
         if offsets is None:
-            return run_one(jobs, retry, None, None, write_back=True)
+            return run_one(jobs, retry, None, None, write_back=True,
+                           faults=faults)
         if isinstance(offsets, str):
             if offsets != "auto":
                 raise ValueError(f"unknown offsets mode: {offsets!r}")
             from repro.core.registry import DEFAULT_OFFSET_GRID
             offsets = DEFAULT_OFFSET_GRID
             shared = self._pack_shared(jobs)
-            sweep = [run_one(jobs, retry, cand, shared, write_back=False)
+            sweep = [run_one(jobs, retry, cand, shared, write_back=False,
+                             faults=faults)
                      for cand in offsets]
             return min(sweep, key=lambda r: r.total_wastage_gbs)
         if isinstance(offsets, dict):
             cand = self._family_offsets(jobs, offsets)
-            return run_one(jobs, retry, cand, None, write_back=False)
+            return run_one(jobs, retry, cand, None, write_back=False,
+                           faults=faults)
         shared = self._pack_shared(jobs)
-        return [run_one(jobs, retry, cand, shared, write_back=False)
+        return [run_one(jobs, retry, cand, shared, write_back=False,
+                        faults=faults)
                 for cand in offsets]
 
     @staticmethod
@@ -341,7 +440,8 @@ class ClusterSim:
                                last_peak_bump=(bump if any_bump else None))
 
     # ---------------------------------------------------------- legacy loop
-    def _run_legacy(self, jobs: List[Job], retry) -> ClusterResult:
+    def _run_legacy(self, jobs: List[Job], retry,
+                    faults: Tuple[FaultEvent, ...] = ()) -> ClusterResult:
         spec, retry_fn = _as_spec(retry)
         if retry_fn is None:
             # RetrySpec rules that reference "the machine" (max-machine,
@@ -352,22 +452,69 @@ class ClusterSim:
                 return apply_retry_spec(_spec, plan, t_fail, used,
                                         machine_memory=_cap)
         frontier = _DagFrontier.build(jobs)
-        queue: List[Job] = (list(jobs) if frontier is None
-                            else [jobs[i] for i in frontier.roots()])
-        events: List[Tuple[float, int, str, int, Job]] = []
+        active: List[Node] = list(self.nodes)
+        by_nid: Dict[int, Node] = {n.nid: n for n in active}
+        epoch: Dict[int, int] = {job.jid: 0 for job in jobs}
+        queue: List[Job] = []
+        parked: List[Job] = []
+        park_t: Dict[int, float] = {}
+        need_cache: Dict[int, float] = {}
+        events: List[Tuple[float, int, str, int, object, int]] = []
         seq = itertools.count()
         retries = 0
         unschedulable = 0
+        evictions = 0
+        doomed = 0
+        finished = 0
+        starvation_s = 0.0
         area_used = 0.0
         done_at = 0.0
+        last_t = 0.0
         placements: List[Tuple[float, int, int]] = []
+        have_faults = bool(faults)
+        cap_sum = float(sum(n.capacity_gb for n in active))
+        cap_integral = 0.0
+        cap_last = 0.0
+
+        for i in (range(len(jobs)) if frontier is None
+                  else frontier.roots()):
+            job = jobs[i]
+            if job.release_time > 0.0:
+                heapq.heappush(events, (float(job.release_time), next(seq),
+                                        "arrive", -1, job, 0))
+            else:
+                queue.append(job)
+        for fe in faults:
+            heapq.heappush(events, (float(fe.t), next(seq), fe.kind,
+                                    int(fe.nid), fe, 0))
+
+        def need_peak(job: Job) -> float:
+            """Peak of the admission-need row (invalidated on re-plan) —
+            the packed engines' ``need.max(axis=1)``, one job at a time."""
+            v = need_cache.get(job.jid)
+            if v is None:
+                v = float(np.max(alloc_at(
+                    job.plan,
+                    np.linspace(0.0, job.est_runtime, ADMIT_GRID))))
+                need_cache[job.jid] = v
+            return v
 
         def try_admit(now: float):
+            # Graceful degradation: a job no surviving node could *ever*
+            # fit parks in a starvation-tracked side queue (it re-enters
+            # on the next join) instead of spinning in the scan below.
+            if queue:
+                cap_hi = max((n.capacity_gb for n in active), default=0.0)
+                for job in [j for j in queue
+                            if need_peak(j) > cap_hi + 1e-9]:
+                    queue.remove(job)
+                    parked.append(job)
+                    park_t[job.jid] = now
             admitted = True
             while admitted and queue:
                 admitted = False
                 for job in list(queue):
-                    for node in self.nodes:
+                    for node in active:
                         if node.fits(job, now):
                             queue.remove(job)
                             node.running.append((now, job))
@@ -375,14 +522,25 @@ class ClusterSim:
                             v = first_violation(job.plan, job.mem, job.dt)
                             if v < 0:
                                 end = now + job.runtime
-                                heapq.heappush(events, (end, next(seq), "done",
-                                                        node.nid, job))
+                                heapq.heappush(
+                                    events, (end, next(seq), "done",
+                                             node.nid, job,
+                                             epoch[job.jid]))
                             else:
-                                heapq.heappush(events, (now + v * job.dt,
-                                                        next(seq), "oom",
-                                                        node.nid, job))
+                                heapq.heappush(
+                                    events, (now + v * job.dt, next(seq),
+                                             "oom", node.nid, job,
+                                             epoch[job.jid]))
                             admitted = True
                             break
+
+        def submit_child(c: int, now: float):
+            child = jobs[c]
+            if child.release_time > now:
+                heapq.heappush(events, (float(child.release_time),
+                                        next(seq), "arrive", -1, child, 0))
+            else:
+                queue.append(child)
 
         try_admit(0.0)
         guard = 0
@@ -390,39 +548,110 @@ class ClusterSim:
             guard += 1
             if guard > 200_000:
                 raise RuntimeError("cluster sim did not converge")
-            t, _, kind, nid, job = heapq.heappop(events)
-            node = self.nodes[nid]
-            node.running = [(s, j) for s, j in node.running if j.jid != job.jid]
-            if kind == "done":
-                alloc = alloc_at(job.plan,
-                                 np.arange(len(job.mem)) * job.dt)
-                job.wasted_gbs += float(np.sum(alloc - job.mem) * job.dt)
-                area_used += float(np.sum(job.mem) * job.dt)
-                done_at = max(done_at, t)
-                if frontier is not None:  # dependency-release
-                    queue.extend(
-                        jobs[c] for c in
-                        frontier.release(frontier.index[job.jid]))
-            else:  # OOM kill
-                v = first_violation(job.plan, job.mem, job.dt)
-                alloc = alloc_at(job.plan, np.arange(v + 1) * job.dt)
-                job.wasted_gbs += float(np.sum(alloc) * job.dt)
-                job.attempts += 1
-                retries += 1
-                if job.attempts >= self.max_attempts or \
-                        float(np.max(job.mem)) > max(
-                            n.capacity_gb for n in self.nodes):
-                    unschedulable += 1
-                    if frontier is not None:  # descendants can never run
-                        unschedulable += frontier.doom(
-                            frontier.index[job.jid])
-                else:
-                    job.plan = retry_fn(job.plan, v * job.dt,
-                                        float(job.mem[v]))
+            t, _, kind, nid, payload, ep = heapq.heappop(events)
+            last_t = max(last_t, t)
+            if kind in ("done", "oom"):
+                job = payload
+                if ep != epoch[job.jid]:
+                    continue  # evicted since this event was scheduled
+                node = by_nid[nid]
+                node.running = [(s, j) for s, j in node.running
+                                if j.jid != job.jid]
+                if kind == "done":
+                    alloc = alloc_at(job.plan,
+                                     np.arange(len(job.mem)) * job.dt)
+                    job.wasted_gbs += float(np.sum(alloc - job.mem) * job.dt)
+                    area_used += float(np.sum(job.mem) * job.dt)
+                    done_at = max(done_at, t)
+                    finished += 1
+                    if frontier is not None:  # dependency-release
+                        for c in frontier.release(
+                                frontier.index[job.jid]):
+                            submit_child(c, t)
+                else:  # OOM kill
+                    v = first_violation(job.plan, job.mem, job.dt)
+                    alloc = alloc_at(job.plan, np.arange(v + 1) * job.dt)
+                    job.wasted_gbs += float(np.sum(alloc) * job.dt)
+                    job.attempts += 1
+                    retries += 1
+                    if job.attempts >= self.max_attempts or \
+                            float(np.max(job.mem)) > max(
+                                n.capacity_gb for n in self.nodes):
+                        unschedulable += 1
+                        if frontier is not None:  # descendants blocked
+                            d = frontier.doom(frontier.index[job.jid])
+                            doomed += d
+                            unschedulable += d
+                    else:
+                        job.plan = retry_fn(job.plan, v * job.dt,
+                                            float(job.mem[v]))
+                        need_cache.pop(job.jid, None)
+                        queue.append(job)
+                try_admit(t)
+            elif kind == "arrive":
+                job = payload
+                if frontier is None or \
+                        not frontier.dead[frontier.index[job.jid]]:
                     queue.append(job)
-            try_admit(t)
+                try_admit(t)
+            elif kind == "leave":
+                pos = next((i for i, n in enumerate(active)
+                            if n.nid == nid), -1)
+                if pos < 0:
+                    raise KeyError(
+                        f"node_leave: unknown or inactive node {nid} "
+                        f"at t={t:g}")
+                cap_integral += cap_sum * (t - cap_last)
+                cap_last = t
+                node = active.pop(pos)
+                cap_sum -= node.capacity_gb
+                victims = list(node.running)
+                node.running = []
+                requeue: List[Job] = []
+                for (s, job) in victims:
+                    epoch[job.jid] += 1     # stale pending done/oom events
+                    evictions += 1
+                    e = _elapsed_samples(t, s, job.dt, len(job.mem))
+                    alloc = alloc_at(job.plan, np.arange(e) * job.dt)
+                    job.wasted_gbs += float(np.sum(alloc) * job.dt)
+                    job.attempts += 1       # the RetrySpec attempt budget
+                    if job.attempts >= self.max_attempts:
+                        unschedulable += 1
+                        if frontier is not None:
+                            d = frontier.doom(frontier.index[job.jid])
+                            doomed += d
+                            unschedulable += d
+                    else:
+                        requeue.append(job)
+                queue[0:0] = requeue  # evicted jobs go ahead of waiters
+                try_admit(t)
+            else:  # join
+                if any(n.nid == nid for n in active):
+                    raise ValueError(
+                        f"node_join: node {nid} already active at t={t:g}")
+                cap_integral += cap_sum * (t - cap_last)
+                cap_last = t
+                fe = payload
+                node = Node(nid, float(fe.capacity_gb))
+                by_nid[nid] = node
+                active.append(node)
+                cap_sum += node.capacity_gb
+                if parked:  # unpark everything; the sweep re-parks misfits
+                    for job in parked:
+                        starvation_s += t - park_t.pop(job.jid)
+                    queue[0:0] = parked
+                    parked.clear()
+                try_admit(t)
 
-        total_cap_area = sum(n.capacity_gb for n in self.nodes) * max(done_at, 1e-9)
+        for job in parked:
+            starvation_s += last_t - park_t.pop(job.jid)
+        if have_faults:
+            end_t = max(done_at, cap_last)
+            cap_integral += cap_sum * (end_t - cap_last)
+            total_cap_area = max(cap_integral, 1e-9)
+        else:
+            total_cap_area = sum(
+                n.capacity_gb for n in self.nodes) * max(done_at, 1e-9)
         return ClusterResult(
             makespan=done_at,
             total_wastage_gbs=sum(j.wasted_gbs for j in jobs),
@@ -430,6 +659,11 @@ class ClusterSim:
             unschedulable=unschedulable,
             avg_utilization=area_used / total_cap_area,
             placements=placements,
+            evictions=evictions,
+            doomed=doomed,
+            starved=len(jobs) - finished - unschedulable,
+            starvation_s=starvation_s,
+            finished=finished,
         )
 
     # ---------------------------------------------------------- packed loop
@@ -536,7 +770,8 @@ class ClusterSim:
 
     def _run_packed(self, jobs: List[Job], retry,
                     offset: Optional[OffsetCandidate], shared,
-                    write_back: bool) -> ClusterResult:
+                    write_back: bool,
+                    faults: Tuple[FaultEvent, ...] = ()) -> ClusterResult:
         if not jobs:
             return ClusterResult(0.0, 0.0, 0, 0, 0.0, placements=[],
                                  offset=offset)
@@ -550,18 +785,46 @@ class ClusterSim:
         attempts0 = np.asarray([j.attempts for j in jobs], np.int64)
         attempts = attempts0.copy()
         wasted = np.asarray([j.wasted_gbs for j in jobs], np.float64)
-        node_running: List[List[int]] = [[] for _ in self.nodes]
+        release = np.asarray([j.release_time for j in jobs], np.float64)
+        need_max = need.max(axis=1)
+        # Fleet membership: events carry the stable ``nid``; positions in
+        # these parallel lists shift under churn (leaves splice, joins
+        # append — the same order the legacy loop's ``active`` keeps).
+        active_nids: List[int] = [n.nid for n in self.nodes]
+        caps_act = caps.copy()
+        node_running: List[List[int]] = [[] for _ in active_nids]
         admit_t = np.zeros((B,), np.float64)
+        epoch = np.zeros((B,), np.int64)
         frontier = _DagFrontier.build(jobs)
-        queue: List[int] = (list(range(B)) if frontier is None
-                            else frontier.roots())
-        events: List[Tuple[float, int, str, int, int]] = []
+        queue: List[int] = []
+        parked: List[int] = []
+        park_t: Dict[int, float] = {}
+        events: List[Tuple[float, int, str, int, object, int]] = []
         seq = itertools.count()
         retries = 0
         unschedulable = 0
+        evictions = 0
+        doomed = 0
+        finished = 0
+        starvation_s = 0.0
         area_used = 0.0
         done_at = 0.0
+        last_t = 0.0
         placements: List[Tuple[float, int, int]] = []
+        have_faults = bool(faults)
+        cap_sum = float(caps_act.sum())
+        cap_integral = 0.0
+        cap_last = 0.0
+
+        for ji in (range(B) if frontier is None else frontier.roots()):
+            if release[ji] > 0.0:
+                heapq.heappush(events, (float(release[ji]), next(seq),
+                                        "arrive", -1, ji, 0))
+            else:
+                queue.append(ji)
+        for fe in faults:
+            heapq.heappush(events, (float(fe.t), next(seq), fe.kind,
+                                    int(fe.nid), fe, 0))
 
         def fits_column(ni: int, q: List[int], now: float) -> Dict[int, bool]:
             """Admission predicate for every queued job vs node ``ni`` at
@@ -569,18 +832,24 @@ class ClusterSim:
             run = node_running[ni]
             grid_abs = now + grid_rel[q]
             resid = residual_over(
-                caps[ni], starts[run], peaks[run], admit_t[run], grid_abs,
-                dur=runtimes[run])
+                caps_act[ni], starts[run], peaks[run], admit_t[run],
+                grid_abs, dur=runtimes[run])
             ok = fits_under(need[q], resid)
             return dict(zip(q, ok.tolist()))
 
         def try_admit(now: float):
+            if queue:  # park jobs no surviving node could ever fit
+                cap_hi = float(caps_act.max()) if active_nids else 0.0
+                for ji in [q for q in queue if need_max[q] > cap_hi + 1e-9]:
+                    queue.remove(ji)
+                    parked.append(ji)
+                    park_t[ji] = now
             cols: Dict[int, Dict[int, bool]] = {}
             admitted = True
             while admitted and queue:
                 admitted = False
                 for ji in list(queue):
-                    for ni in range(len(self.nodes)):
+                    for ni in range(len(active_nids)):
                         col = cols.get(ni)
                         if col is None or ji not in col:
                             col = cols[ni] = fits_column(ni, list(queue), now)
@@ -590,17 +859,18 @@ class ClusterSim:
                             admit_t[ji] = now
                             cols.pop(ni, None)  # this node's residual changed
                             placements.append(
-                                (float(now), self.nodes[ni].nid,
-                                 jobs[ji].jid))
+                                (float(now), active_nids[ni], jobs[ji].jid))
                             v = viol[ji]
                             if v < 0:
                                 heapq.heappush(
                                     events, (now + runtimes[ji], next(seq),
-                                             "done", ni, ji))
+                                             "done", active_nids[ni], ji,
+                                             int(epoch[ji])))
                             else:
                                 heapq.heappush(
                                     events, (now + v * dts[ji], next(seq),
-                                             "oom", ni, ji))
+                                             "oom", active_nids[ni], ji,
+                                             int(epoch[ji])))
                             admitted = True
                             break
 
@@ -610,60 +880,133 @@ class ClusterSim:
             guard += 1
             if guard > 200_000:
                 raise RuntimeError("cluster sim did not converge")
-            t, _, kind, ni, ji = heapq.heappop(events)
-            node_running[ni].remove(ji)
-            row = slice(ji, ji + 1)
-            if kind == "done":
-                w = span_alloc_sum(peaks[row], bounds[row], lengths[row])[0]
-                wasted[ji] += (w - summem[ji]) * dts[ji]
-                area_used += summem[ji] * dts[ji]
-                done_at = max(done_at, t)
-                if frontier is not None:  # dependency-release
-                    queue.extend(frontier.release(ji))
-            else:  # OOM kill
-                v = int(viol[ji])
-                w = span_alloc_sum(peaks[row], bounds[row],
-                                   np.asarray([v + 1]))[0]
-                wasted[ji] += w * dts[ji]
-                attempts[ji] += 1
-                retries += 1
-                if attempts[ji] >= self.max_attempts or \
-                        peak_demand[ji] > cap_max:
-                    unschedulable += 1
-                    if frontier is not None:  # descendants can never run
-                        unschedulable += frontier.doom(ji)
-                else:
-                    t_fail = v * dts[ji]
-                    used = float(jobs[ji].mem[v])
-                    if spec is not None:
-                        ns, npk = retry_packed(
-                            spec, starts[row], peaks[row], nseg[row],
-                            np.asarray([t_fail]), np.asarray([used]),
-                            machine_memory=cap_max,
-                            bump=(None if bump_lanes is None
-                                  else bump_lanes[row]))
-                        starts[ji], peaks[ji] = ns[0], npk[0]
+            t, _, kind, nid, payload, ep = heapq.heappop(events)
+            last_t = max(last_t, t)
+            if kind in ("done", "oom"):
+                ji = payload
+                if ep != epoch[ji]:
+                    continue  # evicted since this event was scheduled
+                node_running[active_nids.index(nid)].remove(ji)
+                row = slice(ji, ji + 1)
+                if kind == "done":
+                    w = span_alloc_sum(peaks[row], bounds[row],
+                                       lengths[row])[0]
+                    wasted[ji] += (w - summem[ji]) * dts[ji]
+                    area_used += summem[ji] * dts[ji]
+                    done_at = max(done_at, t)
+                    finished += 1
+                    if frontier is not None:  # dependency-release
+                        for c in frontier.release(ji):
+                            if release[c] > t:
+                                heapq.heappush(
+                                    events, (float(release[c]), next(seq),
+                                             "arrive", -1, c, 0))
+                            else:
+                                queue.append(c)
+                else:  # OOM kill
+                    v = int(viol[ji])
+                    w = span_alloc_sum(peaks[row], bounds[row],
+                                       np.asarray([v + 1]))[0]
+                    wasted[ji] += w * dts[ji]
+                    attempts[ji] += 1
+                    retries += 1
+                    if attempts[ji] >= self.max_attempts or \
+                            peak_demand[ji] > cap_max:
+                        unschedulable += 1
+                        if frontier is not None:  # descendants blocked
+                            d = frontier.doom(ji)
+                            doomed += d
+                            unschedulable += d
                     else:
-                        s, p = PackedEnvelopes(
-                            starts, peaks, nseg).row(ji)
-                        new = retry_fn(AllocationPlan(s, p), t_fail, used)
-                        starts[ji, :new.n] = new.starts
-                        starts[ji, new.n:] = PAD_START
-                        peaks[ji, :new.n] = new.peaks
-                        peaks[ji, new.n:] = new.peaks[-1]
-                        nseg[ji] = new.n
-                    # Refresh the lane's derived state (plan changed).
-                    need[ji] = alloc_at_packed(
-                        starts[row], peaks[row], grid_rel[row])[0]
-                    bounds[ji] = segment_sample_bounds(
-                        starts[row], dts[ji])[0]
-                    viol[ji] = first_violation_packed(
-                        starts[row], peaks[row],
-                        np.asarray(jobs[ji].mem, np.float64)[None, :],
-                        lengths[row], float(dts[ji]))[0]
+                        t_fail = v * dts[ji]
+                        used = float(jobs[ji].mem[v])
+                        if spec is not None:
+                            ns, npk = retry_packed(
+                                spec, starts[row], peaks[row], nseg[row],
+                                np.asarray([t_fail]), np.asarray([used]),
+                                machine_memory=cap_max,
+                                bump=(None if bump_lanes is None
+                                      else bump_lanes[row]))
+                            starts[ji], peaks[ji] = ns[0], npk[0]
+                        else:
+                            s, p = PackedEnvelopes(
+                                starts, peaks, nseg).row(ji)
+                            new = retry_fn(AllocationPlan(s, p), t_fail,
+                                           used)
+                            starts[ji, :new.n] = new.starts
+                            starts[ji, new.n:] = PAD_START
+                            peaks[ji, :new.n] = new.peaks
+                            peaks[ji, new.n:] = new.peaks[-1]
+                            nseg[ji] = new.n
+                        # Refresh the lane's derived state (plan changed).
+                        need[ji] = alloc_at_packed(
+                            starts[row], peaks[row], grid_rel[row])[0]
+                        need_max[ji] = need[ji].max()
+                        bounds[ji] = segment_sample_bounds(
+                            starts[row], dts[ji])[0]
+                        viol[ji] = first_violation_packed(
+                            starts[row], peaks[row],
+                            np.asarray(jobs[ji].mem, np.float64)[None, :],
+                            lengths[row], float(dts[ji]))[0]
+                        queue.append(ji)
+                try_admit(t)
+            elif kind == "arrive":
+                ji = payload
+                if frontier is None or not frontier.dead[ji]:
                     queue.append(ji)
-            try_admit(t)
+                try_admit(t)
+            elif kind == "leave":
+                if nid not in active_nids:
+                    raise KeyError(
+                        f"node_leave: unknown or inactive node {nid} "
+                        f"at t={t:g}")
+                cap_integral += cap_sum * (t - cap_last)
+                cap_last = t
+                pos = active_nids.index(nid)
+                cap_sum -= float(caps_act[pos])
+                caps_act = np.delete(caps_act, pos)
+                victims = node_running.pop(pos)
+                active_nids.pop(pos)
+                requeue: List[int] = []
+                for ji in victims:
+                    epoch[ji] += 1      # stale pending done/oom events
+                    evictions += 1
+                    e = _elapsed_samples(t, admit_t[ji], dts[ji],
+                                         lengths[ji])
+                    w = span_alloc_sum(peaks[ji:ji + 1], bounds[ji:ji + 1],
+                                       np.asarray([e]))[0]
+                    wasted[ji] += w * dts[ji]
+                    attempts[ji] += 1   # the RetrySpec attempt budget
+                    if attempts[ji] >= self.max_attempts:
+                        unschedulable += 1
+                        if frontier is not None:
+                            d = frontier.doom(ji)
+                            doomed += d
+                            unschedulable += d
+                    else:
+                        requeue.append(ji)
+                queue[0:0] = requeue  # evicted jobs go ahead of waiters
+                try_admit(t)
+            else:  # join
+                if nid in active_nids:
+                    raise ValueError(
+                        f"node_join: node {nid} already active at t={t:g}")
+                cap_integral += cap_sum * (t - cap_last)
+                cap_last = t
+                fe = payload
+                active_nids.append(nid)
+                node_running.append([])
+                caps_act = np.append(caps_act, float(fe.capacity_gb))
+                cap_sum += float(fe.capacity_gb)
+                if parked:  # unpark; the sweep re-parks misfits
+                    for ji in parked:
+                        starvation_s += t - park_t.pop(ji)
+                    queue[0:0] = parked
+                    parked.clear()
+                try_admit(t)
 
+        for ji in parked:
+            starvation_s += last_t - park_t.pop(ji)
         if write_back:
             for i, job in enumerate(jobs):
                 job.attempts = int(attempts[i])
@@ -672,7 +1015,12 @@ class ClusterSim:
                     s, p = PackedEnvelopes(starts, peaks, nseg).row(i)
                     job.plan = AllocationPlan(starts=s, peaks=p)
 
-        total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
+        if have_faults:
+            end_t = max(done_at, cap_last)
+            cap_integral += cap_sum * (end_t - cap_last)
+            total_cap_area = max(cap_integral, 1e-9)
+        else:
+            total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
         return ClusterResult(
             makespan=done_at,
             total_wastage_gbs=float(wasted.sum()),
@@ -681,13 +1029,19 @@ class ClusterSim:
             avg_utilization=area_used / total_cap_area,
             placements=placements,
             offset=offset,
+            evictions=evictions,
+            doomed=doomed,
+            starved=B - finished - unschedulable,
+            starvation_s=starvation_s,
+            finished=finished,
         )
 
     # ----------------------------------------------------------- fused loop
     def _run_fused(self, jobs: List[Job], retry,
                    offset: Optional[OffsetCandidate], shared,
                    write_back: bool,
-                   admission_backend: str = "fused") -> ClusterResult:
+                   admission_backend: str = "fused",
+                   faults: Tuple[FaultEvent, ...] = ()) -> ClusterResult:
         """Packed event loop with the per-event hot path fused into XLA.
 
         Decision-for-decision identical to :meth:`_run_packed` (the
@@ -717,19 +1071,46 @@ class ClusterSim:
         attempts0 = np.asarray([j.attempts for j in jobs], np.int64)
         attempts = attempts0.copy()
         wasted = np.asarray([j.wasted_gbs for j in jobs], np.float64)
+        release = np.asarray([j.release_time for j in jobs], np.float64)
+        need_max = need.max(axis=1)
         adm = AdmissionState(caps, K=K, G=ADMIT_GRID,
                              backend=admission_backend, use_dur=True)
         adm.add_lanes(starts, peaks, need, grid_rel, dur=runtimes)
+        # Node rows in ``adm`` are positional; events carry the stable
+        # ``nid`` and map through this list (leaves splice, joins append —
+        # AdmissionState's remove_node/add_node row protocol).
+        active_nids: List[int] = [n.nid for n in self.nodes]
+        epoch = np.zeros((B,), np.int64)
         frontier = _DagFrontier.build(jobs)
-        queue: List[int] = (list(range(B)) if frontier is None
-                            else frontier.roots())
-        events: List[Tuple[float, int, str, int, int]] = []
+        queue: List[int] = []
+        parked: List[int] = []
+        park_t: Dict[int, float] = {}
+        events: List[Tuple[float, int, str, int, object, int]] = []
         seq = itertools.count()
         retries = 0
         unschedulable = 0
+        evictions = 0
+        doomed = 0
+        finished = 0
+        starvation_s = 0.0
         area_used = 0.0
         done_at = 0.0
+        last_t = 0.0
         placements: List[Tuple[float, int, int]] = []
+        have_faults = bool(faults)
+        cap_sum = float(caps.sum())
+        cap_integral = 0.0
+        cap_last = 0.0
+
+        for ji in (range(B) if frontier is None else frontier.roots()):
+            if release[ji] > 0.0:
+                heapq.heappush(events, (float(release[ji]), next(seq),
+                                        "arrive", -1, ji, 0))
+            else:
+                queue.append(ji)
+        for fe in faults:
+            heapq.heappush(events, (float(fe.t), next(seq), fe.kind,
+                                    int(fe.nid), fe, 0))
 
         def try_admit(now: float):
             """Greedy drain on the shared fits matrix.
@@ -742,6 +1123,12 @@ class ClusterSim:
             invalidated entries (one fused dispatch) and picks the first
             (job, node) pair in (queue, node) order from the matrix.
             """
+            if queue:  # park jobs no surviving node could ever fit
+                cap_hi = float(adm.caps.max()) if adm.N else 0.0
+                for ji in [q for q in queue if need_max[q] > cap_hi + 1e-9]:
+                    queue.remove(ji)
+                    parked.append(ji)
+                    park_t[ji] = now
             adm.sync_now(now)
             while queue:
                 adm.columns(now, queue)  # one dispatch for invalid entries
@@ -756,33 +1143,29 @@ class ClusterSim:
                 queue.remove(ji)
                 adm.place(ni, ji, now)
                 placements.append(
-                    (float(now), self.nodes[ni].nid, jobs[ji].jid))
+                    (float(now), active_nids[ni], jobs[ji].jid))
                 v = viol[ji]
                 if v < 0:
                     heapq.heappush(events, (now + runtimes[ji], next(seq),
-                                            "done", ni, ji))
+                                            "done", active_nids[ni], ji,
+                                            int(epoch[ji])))
                 else:
                     heapq.heappush(events, (now + v * dts[ji], next(seq),
-                                            "oom", ni, ji))
+                                            "oom", active_nids[ni], ji,
+                                            int(epoch[ji])))
 
-        try_admit(0.0)
-        guard = 0
-        while events:
-            # Drain the maximal same-time prefix: events pushed *during*
-            # this batch land behind it in (t, seq) order, exactly where
-            # the one-at-a-time loop would pop them.
-            t = events[0][0]
-            batch: List[Tuple[float, int, str, int, int]] = []
-            while events and events[0][0] == t:
-                batch.append(heapq.heappop(events))
-            guard += len(batch)
-            if guard > 200_000:
-                raise RuntimeError("cluster sim did not converge")
-
-            # Stage wastage for the whole batch against the *pre-retry*
-            # plans (compacted multi-row span arithmetic).
-            done_idx = [ji for (_, _, k, _, ji) in batch if k == "done"]
-            oom_idx = [ji for (_, _, k, _, ji) in batch if k == "oom"]
+        def process_job_run(run_events):
+            """One contiguous run of *fresh* done/oom events inside a
+            same-time batch: stage wastage and compacted retries exactly
+            like the pre-churn whole-batch path (no membership change can
+            occur inside a run, so the staging stays decision-safe), then
+            process the events one at a time."""
+            nonlocal retries, unschedulable, doomed, finished
+            nonlocal area_used, done_at
+            # Stage wastage for the run against the *pre-retry* plans
+            # (compacted multi-row span arithmetic).
+            done_idx = [ev[4] for ev in run_events if ev[2] == "done"]
+            oom_idx = [ev[4] for ev in run_events if ev[2] == "oom"]
             w_done: Dict[int, float] = {}
             w_oom: Dict[int, float] = {}
             if done_idx:
@@ -831,6 +1214,7 @@ class ClusterSim:
                 # batched pass per dt group.
                 need[rows] = alloc_at_packed(
                     starts[rows], peaks[rows], grid_rel[rows])
+                need_max[rows] = need[rows].max(axis=1)
                 bounds[rows] = segment_sample_bounds(
                     starts[rows], dts[rows][:, None])
                 by_dt: Dict[float, List[int]] = {}
@@ -851,16 +1235,23 @@ class ClusterSim:
                 # with, not the staged re-plan.
             retryable = set(retry_set)
 
-            # Process the batch one event at a time — identical admission
+            # Process the run one event at a time — identical admission
             # interleaving to the per-event loop.
-            for (t_, _, kind, ni, ji) in batch:
-                adm.release(ni, ji)
+            for (t_, _, kind, nid, ji, _) in run_events:
+                adm.release(active_nids.index(nid), ji)
                 if kind == "done":
                     wasted[ji] += (w_done[ji] - summem[ji]) * dts[ji]
                     area_used += summem[ji] * dts[ji]
                     done_at = max(done_at, t_)
+                    finished += 1
                     if frontier is not None:  # dependency-release
-                        queue.extend(frontier.release(ji))
+                        for c in frontier.release(ji):
+                            if release[c] > t_:
+                                heapq.heappush(
+                                    events, (float(release[c]), next(seq),
+                                             "arrive", -1, c, 0))
+                            else:
+                                queue.append(c)
                 else:  # OOM kill
                     wasted[ji] += w_oom[ji] * dts[ji]
                     attempts[ji] += 1
@@ -874,9 +1265,114 @@ class ClusterSim:
                     else:
                         unschedulable += 1
                         if frontier is not None:  # descendants blocked
-                            unschedulable += frontier.doom(ji)
+                            d = frontier.doom(ji)
+                            doomed += d
+                            unschedulable += d
                 try_admit(t_)
 
+        def process_leave(t: float, nid: int):
+            """Node death: drop the admission row (validity-mask entries
+            for the dead node vanish with it; other nodes' cached fits
+            stay valid — their residuals are unchanged), evict residents
+            in admission order, and account the kill like an OOM whose
+            wastage stops at the eviction time."""
+            nonlocal evictions, unschedulable, doomed
+            nonlocal cap_sum, cap_integral, cap_last
+            if nid not in active_nids:
+                raise KeyError(
+                    f"node_leave: unknown or inactive node {nid} "
+                    f"at t={t:g}")
+            cap_integral += cap_sum * (t - cap_last)
+            cap_last = t
+            pos = active_nids.index(nid)
+            cap_sum -= float(adm.caps[pos])
+            evicted = adm.remove_node(pos)
+            active_nids.pop(pos)
+            requeue: List[int] = []
+            for ji in evicted:
+                epoch[ji] += 1      # stale pending done/oom events
+                evictions += 1
+                e = _elapsed_samples(t, adm.admit_t[ji], dts[ji],
+                                     lengths[ji])
+                w = span_alloc_sum(peaks[ji:ji + 1], bounds[ji:ji + 1],
+                                   np.asarray([e]))[0]
+                wasted[ji] += w * dts[ji]
+                attempts[ji] += 1   # the RetrySpec attempt budget
+                if attempts[ji] >= self.max_attempts:
+                    unschedulable += 1
+                    if frontier is not None:
+                        d = frontier.doom(ji)
+                        doomed += d
+                        unschedulable += d
+                else:
+                    requeue.append(ji)
+            queue[0:0] = requeue  # evicted jobs go ahead of waiters
+
+        def process_join(t: float, nid: int, fe: FaultEvent):
+            nonlocal cap_sum, cap_integral, cap_last, starvation_s
+            if nid in active_nids:
+                raise ValueError(
+                    f"node_join: node {nid} already active at t={t:g}")
+            cap_integral += cap_sum * (t - cap_last)
+            cap_last = t
+            adm.add_node(float(fe.capacity_gb))
+            active_nids.append(nid)
+            cap_sum += float(fe.capacity_gb)
+            if parked:  # unpark; the sweep re-parks misfits
+                for ji in parked:
+                    starvation_s += t - park_t.pop(ji)
+                queue[0:0] = parked
+                parked.clear()
+
+        try_admit(0.0)
+        guard = 0
+        while events:
+            # Drain the maximal same-time prefix: events pushed *during*
+            # this batch land behind it in (t, seq) order, exactly where
+            # the one-at-a-time loop would pop them.
+            t = events[0][0]
+            batch: List[Tuple[float, int, str, int, object, int]] = []
+            while events and events[0][0] == t:
+                batch.append(heapq.heappop(events))
+            guard += len(batch)
+            if guard > 200_000:
+                raise RuntimeError("cluster sim did not converge")
+            last_t = max(last_t, t)
+
+            # Segment the batch: contiguous runs of done/oom events keep
+            # the compacted staging path (freshness-filtered — an earlier
+            # leave in this batch may have evicted their lanes), while
+            # membership/arrival events process individually so staged
+            # state never straddles an eviction.
+            i = 0
+            while i < len(batch):
+                kind_i = batch[i][2]
+                if kind_i in ("done", "oom"):
+                    run_events = []
+                    while i < len(batch) and batch[i][2] in ("done", "oom"):
+                        ev = batch[i]
+                        if ev[5] == epoch[ev[4]]:
+                            run_events.append(ev)
+                        i += 1
+                    if run_events:
+                        process_job_run(run_events)
+                elif kind_i == "arrive":
+                    ji = batch[i][4]
+                    i += 1
+                    if frontier is None or not frontier.dead[ji]:
+                        queue.append(ji)
+                    try_admit(t)
+                elif kind_i == "leave":
+                    process_leave(t, batch[i][3])
+                    i += 1
+                    try_admit(t)
+                else:  # join
+                    process_join(t, batch[i][3], batch[i][4])
+                    i += 1
+                    try_admit(t)
+
+        for ji in parked:
+            starvation_s += last_t - park_t.pop(ji)
         if write_back:
             for i, job in enumerate(jobs):
                 job.attempts = int(attempts[i])
@@ -885,7 +1381,14 @@ class ClusterSim:
                     s, p = PackedEnvelopes(starts, peaks, nseg).row(i)
                     job.plan = AllocationPlan(starts=s, peaks=p)
 
-        total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
+        if have_faults:
+            # Piecewise-constant capacity under churn; without faults the
+            # pre-churn closed form is kept bit-for-bit.
+            end_t = max(done_at, cap_last)
+            cap_integral += cap_sum * (end_t - cap_last)
+            total_cap_area = max(cap_integral, 1e-9)
+        else:
+            total_cap_area = float(caps.sum()) * max(done_at, 1e-9)
         return ClusterResult(
             makespan=done_at,
             total_wastage_gbs=float(wasted.sum()),
@@ -894,4 +1397,9 @@ class ClusterSim:
             avg_utilization=area_used / total_cap_area,
             placements=placements,
             offset=offset,
+            evictions=evictions,
+            doomed=doomed,
+            starved=B - finished - unschedulable,
+            starvation_s=starvation_s,
+            finished=finished,
         )

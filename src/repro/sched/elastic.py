@@ -142,12 +142,19 @@ class ElasticPlanner:
         The evicted jobs are requeued (ahead of other waiters — they hold
         checkpoints and were running first); with ``now`` given they are
         immediately re-admitted wherever they fit on the surviving slices.
+
+        Raises :class:`KeyError` naming the slice when ``name`` is not a
+        current member — a silent no-op here would let a fleet-state
+        mismatch (double leave, typoed name) go unnoticed while the
+        planner keeps admitting against stale capacity.  The ClusterSim
+        fault path applies the same check to ``leave`` events.
         """
-        sl = self.slices.pop(name, None)
-        if sl is not None:
-            self._adm.remove_node(self._names.index(name))
-            self._names.remove(name)
-        evicted = [(jid, plan) for jid, plan, _ in (sl.jobs if sl else [])]
+        if name not in self.slices:
+            raise KeyError(f"node_leave: unknown slice {name!r}")
+        sl = self.slices.pop(name)
+        self._adm.remove_node(self._names.index(name))
+        self._names.remove(name)
+        evicted = [(jid, plan) for jid, plan, _ in sl.jobs]
         self.pending = evicted + self.pending
         if now is not None:
             self.drain(now)

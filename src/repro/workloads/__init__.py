@@ -12,9 +12,20 @@ Three layers over one representation (:class:`WorkflowTrace` — packed
   (``burst_arrival``, ``heavy_tail``, ``deep_chain``, ``wide_fanout``,
   ``hetero_dt``, ``workload_replay``) consumed by ``evaluate_workflow``,
   the benchmarks and the tests.
+
+Two timing layers ride on top: :mod:`repro.workloads.arrivals` (seeded
+Poisson / diurnal / trace-driven release times, decoupled from DAG
+structure) and :mod:`repro.workloads.suite` (the scenario x arrival x
+fault robustness grid — ``make_suite`` / ``run_suite``).
 """
 
 from repro.workloads import scenarios, wfc
+from repro.workloads.arrivals import (
+    diurnal_arrivals,
+    poisson_arrivals,
+    trace_arrivals,
+    with_arrivals,
+)
 from repro.workloads.generate import (
     SHAPES,
     FamilyRecipe,
@@ -29,6 +40,7 @@ from repro.workloads.generate import (
     synthesize,
 )
 from repro.workloads.scenarios import SCENARIOS, register_scenario, scenario_names
+from repro.workloads.suite import SuiteCase, make_suite, run_suite, suite_table
 from repro.workloads.wfc import (
     export_instance,
     import_instance,
@@ -41,6 +53,9 @@ __all__ = [
     "synthesize", "materialize_traces", "assert_release_order",
     "chain_parents", "fanout_parents", "layered_parents", "barrier_parents",
     "scenarios", "SCENARIOS", "register_scenario", "scenario_names",
+    "poisson_arrivals", "diurnal_arrivals", "trace_arrivals",
+    "with_arrivals",
+    "SuiteCase", "make_suite", "run_suite", "suite_table",
     "wfc", "load_instance", "import_instance", "export_instance",
     "validate_dag_ids",
 ]

@@ -283,6 +283,7 @@ class WorkflowTrace:
     parents: Tuple[Tuple[int, ...], ...]
     batch: FleetBatch
     default_limits: Dict[str, float]
+    release_times: Optional[np.ndarray] = None  # (B,) float64, roots only
     _loc: Optional[np.ndarray] = None    # (B, 2): bucket #, row #
 
     def __post_init__(self):
@@ -355,7 +356,9 @@ class WorkflowTrace:
                 input_gb=float(self.input_gb[i]), mem=mem,
                 dt=float(self.dts[i]), plan=plan,
                 est_runtime=float(self.lengths[i] * self.dts[i]),
-                parents=tuple(self.parents[i])))
+                parents=tuple(self.parents[i]),
+                release_time=(0.0 if self.release_times is None
+                              else float(self.release_times[i]))))
         return jobs
 
     def to_workflow(self) -> "ScenarioWorkflow":

@@ -2,6 +2,7 @@
 online memory monitor — previously only smoke-tested through test_sched."""
 
 import numpy as np
+import pytest
 
 from repro.core import AllocationPlan
 from repro.sched import ElasticPlanner
@@ -42,6 +43,18 @@ class TestElasticChurn:
         # capacity returns → the queue drains
         pl.node_join("n2", 32.0, now=20.0)
         assert pl.queued == []
+
+    def test_leave_unknown_slice_raises_keyerror(self):
+        """A typoed or double leave must fail loudly, naming the slice —
+        silently ignoring it would leave the planner admitting against
+        capacity that no longer exists."""
+        pl = ElasticPlanner()
+        pl.node_join("n0", 32.0)
+        with pytest.raises(KeyError, match="'nope'"):
+            pl.node_leave("nope")
+        pl.node_leave("n0")
+        with pytest.raises(KeyError, match="'n0'"):
+            pl.node_leave("n0")  # double leave
 
     def test_join_without_now_does_not_drain(self):
         """Draining needs the current time — resident envelopes are costed

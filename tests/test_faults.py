@@ -1,0 +1,395 @@
+"""Fault-injection & arrivals: differential engine tests under churn.
+
+The robustness contract extends the packed/fused differential suites to
+time-structured workloads: under any seeded ``FaultSchedule`` and any
+per-job release times, all three engines must produce bitwise-identical
+decision logs (placements, retries, evictions, unschedulable, makespan)
+and wastage/utilization within 1e-6 relative.  On top of that the fault
+semantics themselves are pinned: eviction wastage, attempt accounting,
+doomed-descendant breakouts, parking/starvation, and the loud unknown-
+node errors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationPlan, RetrySpec, ksplus_retry
+from repro.sched import ClusterSim, FaultEvent, FaultSchedule, Job, Node
+from repro.workloads import (
+    SuiteCase,
+    diurnal_arrivals,
+    make_suite,
+    poisson_arrivals,
+    run_suite,
+    suite_table,
+    trace_arrivals,
+)
+
+
+def _nodes():
+    return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0)]
+
+
+def _workload(n_jobs=40, seed=0, under_frac=0.25, dt=1.0, arrivals=None):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    rel = np.zeros(n_jobs)
+    if arrivals is not None:
+        rel = arrivals(n_jobs)
+    for j in range(n_jobs):
+        L = int(rng.integers(24, 90))
+        split = int(rng.uniform(0.4, 0.8) * L)
+        lo = float(rng.uniform(1.5, 3.0))
+        hi = float(rng.uniform(5.0, 11.0))
+        mem = np.concatenate([np.full(split, lo), np.full(L - split, hi)])
+        mem = mem * (1.0 + 0.02 * np.sin(np.arange(L)))
+        under = rng.uniform() < under_frac
+        scale = 0.9 if under else 1.12
+        plan = AllocationPlan(
+            starts=np.asarray([0.0, max(split * dt - 2.0, 1.0)]),
+            peaks=np.asarray([lo * 1.15, hi * scale]))
+        jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem, dt=dt,
+                        plan=plan, est_runtime=float(L * dt),
+                        release_time=float(rel[j])))
+    return jobs
+
+
+def _dag_jobs(max_peak=20.0):
+    """A parent with a 3-deep descendant chain plus independent fillers —
+    the doom-on-eviction scenario (parent lands on node 0, first fit)."""
+    def mk(jid, peak, L=20, parents=()):
+        mem = np.full(L, peak * 0.8)
+        return Job(jid=jid, family="t", input_gb=1.0, mem=mem, dt=1.0,
+                   plan=AllocationPlan(np.zeros(1), np.asarray([peak])),
+                   est_runtime=float(L), parents=tuple(parents))
+    return [mk(0, max_peak, L=100), mk(1, 5.0, parents=(0,)),
+            mk(2, 5.0, parents=(0,)), mk(3, 5.0, parents=(1,))]
+
+
+def _assert_equivalent(a, b):
+    assert b.placements == a.placements  # bitwise decision log
+    assert b.retries == a.retries
+    assert b.unschedulable == a.unschedulable
+    assert b.evictions == a.evictions
+    assert b.doomed == a.doomed
+    assert b.starved == a.starved
+    assert b.finished == a.finished
+    assert b.makespan == a.makespan
+    np.testing.assert_allclose(b.total_wastage_gbs, a.total_wastage_gbs,
+                               rtol=1e-6)
+    np.testing.assert_allclose(b.avg_utilization, a.avg_utilization,
+                               rtol=1e-6)
+    np.testing.assert_allclose(b.starvation_s, a.starvation_s, rtol=1e-6,
+                               atol=1e-9)
+
+
+def _run_three(jobs_builder, faults=None, **sim_kw):
+    legacy = ClusterSim(_nodes(), engine="legacy", **sim_kw).run(
+        jobs_builder(), ksplus_retry, faults=faults)
+    packed = ClusterSim(_nodes(), engine="packed", **sim_kw).run(
+        jobs_builder(), RetrySpec("ksplus"), faults=faults)
+    fused = ClusterSim(_nodes(), engine="fused", **sim_kw).run(
+        jobs_builder(), RetrySpec("ksplus"), faults=faults)
+    return legacy, packed, fused
+
+
+# ---------------------------------------------------------------- schedules
+class TestFaultSchedule:
+    def test_events_sorted_stably(self):
+        fs = FaultSchedule([FaultEvent(5.0, "leave", 1),
+                            FaultEvent(1.0, "leave", 0),
+                            FaultEvent(5.0, "join", 2, 8.0)])
+        assert [e.t for e in fs] == [1.0, 5.0, 5.0]
+        assert [e.nid for e in fs] == [0, 1, 2]  # equal-t keeps input order
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultEvent(1.0, "explode", 0)
+        with pytest.raises(ValueError, match="finite"):
+            FaultEvent(-1.0, "leave", 0)
+        with pytest.raises(ValueError, match="capacity_gb"):
+            FaultEvent(1.0, "join", 0)
+
+    def test_validate_replays_membership(self):
+        fs = FaultSchedule([FaultEvent(1.0, "leave", 0),
+                            FaultEvent(2.0, "join", 0, 48.0)])
+        fs.validate([0, 1])
+        with pytest.raises(KeyError, match="node 7"):
+            FaultSchedule([FaultEvent(1.0, "leave", 7)]).validate([0, 1])
+        with pytest.raises(ValueError, match="already-active"):
+            FaultSchedule([FaultEvent(1.0, "join", 0, 8.0)]).validate([0])
+
+    def test_constructors_deterministic(self):
+        a = FaultSchedule.preemption_storm(_nodes(), t=10.0, seed=3,
+                                           down_time=5.0)
+        b = FaultSchedule.preemption_storm(_nodes(), t=10.0, seed=3,
+                                           down_time=5.0)
+        assert a.events == b.events
+        c = FaultSchedule.node_churn(_nodes(), rate=0.05, horizon=200.0,
+                                     seed=1)
+        d = FaultSchedule.node_churn(_nodes(), rate=0.05, horizon=200.0,
+                                     seed=1)
+        assert c.events == d.events
+        assert c.events != FaultSchedule.node_churn(
+            _nodes(), rate=0.05, horizon=200.0, seed=2).events
+
+    def test_storm_and_churn_validate(self):
+        nids = [n.nid for n in _nodes()]
+        FaultSchedule.preemption_storm(_nodes(), t=10.0, frac=0.9, seed=0,
+                                       down_time=3.0).validate(nids)
+        FaultSchedule.node_churn(_nodes(), rate=0.1, horizon=300.0,
+                                 seed=4).validate(nids)
+
+    def test_rack_failure_groups(self):
+        rack_of = {0: "a", 1: "b", 2: "a"}
+        fs = FaultSchedule.rack_failure(_nodes(), rack_of, "a", t=7.0,
+                                        down_time=2.0)
+        kinds = [(e.kind, e.nid) for e in fs]
+        assert kinds == [("leave", 0), ("leave", 2),
+                         ("join", 0), ("join", 2)]
+        with pytest.raises(ValueError, match="rack 'z'"):
+            FaultSchedule.rack_failure(_nodes(), rack_of, "z", t=7.0)
+
+    def test_add_merges(self):
+        a = FaultSchedule([FaultEvent(5.0, "leave", 0)])
+        b = FaultSchedule([FaultEvent(1.0, "leave", 1)])
+        assert [e.nid for e in a + b] == [1, 0]
+
+
+# ----------------------------------------------------------------- arrivals
+class TestArrivals:
+    def test_poisson_seeded_and_increasing(self):
+        a = poisson_arrivals(64, rate=0.5, seed=9)
+        assert np.array_equal(a, poisson_arrivals(64, rate=0.5, seed=9))
+        assert (np.diff(a) > 0).all() and a[0] > 0
+
+    def test_roots_only(self):
+        parents = ((), (0,), (), (2,))
+        a = poisson_arrivals(4, rate=1.0, seed=0, parents=parents)
+        assert a[1] == 0.0 and a[3] == 0.0
+        assert a[0] > 0 and a[2] > a[0]
+
+    def test_diurnal_modulates(self):
+        a = diurnal_arrivals(128, base_rate=1.0, period=120.0, depth=0.9,
+                             seed=2)
+        assert (np.diff(a) > 0).all()
+        assert np.array_equal(a, diurnal_arrivals(
+            128, base_rate=1.0, period=120.0, depth=0.9, seed=2))
+
+    def test_trace_normalized_and_checked(self):
+        a = trace_arrivals(3, [50.0, 10.0, 30.0])
+        assert np.array_equal(a, [0.0, 20.0, 40.0])
+        with pytest.raises(ValueError, match="root tasks"):
+            trace_arrivals(5, [1.0, 2.0])
+
+    def test_release_times_flow_into_jobs(self):
+        from repro.workloads import scenarios, with_arrivals
+        wf = scenarios.get("wide_fanout", n_tasks=24, seed=0)
+        rel = poisson_arrivals(wf.B, rate=1.0, seed=5, parents=wf.parents)
+        jobs = with_arrivals(wf, rel).to_jobs()
+        assert [j.release_time for j in jobs] == list(rel)
+        assert all(j.release_time == 0.0
+                   for j in wf.to_jobs())  # original untouched
+
+
+# ---------------------------------------------------------------- fail fast
+class TestSubmitValidation:
+    def test_oversized_attempt1_rejected_naming_ids(self):
+        jobs = _workload(6, seed=1)
+        jobs[2].plan = AllocationPlan(np.zeros(1), np.asarray([200.0]))
+        jobs[5].plan = AllocationPlan(np.zeros(1), np.asarray([99.0]))
+        with pytest.raises(ValueError, match=r"job ids \[2, 5\]"):
+            ClusterSim(_nodes()).run(jobs, RetrySpec("ksplus"))
+
+    def test_bad_release_time_rejected(self):
+        jobs = _workload(3, seed=0)
+        jobs[1].release_time = -2.0
+        with pytest.raises(ValueError, match="release_time"):
+            ClusterSim(_nodes()).run(jobs, RetrySpec("ksplus"))
+
+    def test_legacy_engine_validates_too(self):
+        jobs = _workload(3, seed=0)
+        jobs[0].plan = AllocationPlan(np.zeros(1), np.asarray([500.0]))
+        with pytest.raises(ValueError, match="job ids"):
+            ClusterSim(_nodes(), engine="legacy").run(jobs, ksplus_retry)
+
+
+# ------------------------------------------------------------- differential
+class TestDifferentialUnderFaults:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_storm_matches_across_engines(self, seed):
+        faults = FaultSchedule.preemption_storm(
+            _nodes(), t=30.0, frac=0.67, seed=seed, down_time=40.0)
+        legacy, packed, fused = _run_three(
+            lambda: _workload(40, seed=seed), faults=faults)
+        assert legacy.evictions > 0
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+    def test_churn_matches_across_engines(self):
+        faults = FaultSchedule.node_churn(_nodes(), rate=1.0 / 40.0,
+                                          horizon=400.0, seed=7,
+                                          mean_down=30.0)
+        legacy, packed, fused = _run_three(
+            lambda: _workload(48, seed=3), faults=faults)
+        assert legacy.evictions > 0
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+    def test_arrivals_plus_storm_matches(self):
+        arrivals = lambda n: poisson_arrivals(n, rate=0.4, seed=11)
+        faults = FaultSchedule.preemption_storm(
+            _nodes(), t=40.0, frac=0.67, seed=5, down_time=50.0)
+        legacy, packed, fused = _run_three(
+            lambda: _workload(40, seed=2, arrivals=arrivals), faults=faults)
+        assert min(t for t, _, _ in legacy.placements) > 0.0
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+    def test_eviction_wastage_stops_at_kill_time(self):
+        """One job, one eviction at a known time: wastage is the plan
+        area over the elapsed whole samples, in every engine."""
+        def build():
+            mem = np.full(60, 8.0)
+            return [Job(jid=0, family="t", input_gb=1.0, mem=mem, dt=1.0,
+                        plan=AllocationPlan(np.zeros(1), np.asarray([10.0])),
+                        est_runtime=60.0)]
+        faults = [FaultEvent(10.5, "leave", 0)]
+        legacy, packed, fused = _run_three(build, faults=faults)
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+        # 10 whole samples of the 10 GB envelope + the retried full run
+        assert legacy.evictions == 1 and legacy.finished == 1
+        assert legacy.total_wastage_gbs >= 10 * 10.0
+
+    def test_no_faults_keeps_prior_results(self):
+        """faults=None must be byte-for-byte the pre-fault code path —
+        including the closed-form utilization denominator."""
+        base = ClusterSim(_nodes()).run(_workload(40, seed=4),
+                                        RetrySpec("ksplus"))
+        with_none = ClusterSim(_nodes()).run(_workload(40, seed=4),
+                                             RetrySpec("ksplus"),
+                                             faults=None)
+        assert base.placements == with_none.placements
+        assert base.avg_utilization == with_none.avg_utilization
+        assert base.total_wastage_gbs == with_none.total_wastage_gbs
+
+
+# --------------------------------------------------------- doom on eviction
+class TestDoomOnEviction:
+    @pytest.mark.parametrize("backend", ["numpy", "fused"])
+    def test_parent_evicted_mid_storm_dooms_descendants(self, backend):
+        """Parent loses its node twice (max_attempts=2): attempt budget
+        exhausts through evictions alone and the whole descendant chain
+        is doomed — same counts in the fused engine on both admission
+        backends as in the legacy oracle."""
+        faults = (FaultEvent(10.0, "leave", 0), FaultEvent(30.0, "leave", 1))
+        legacy = ClusterSim(_nodes(), engine="legacy", max_attempts=2).run(
+            _dag_jobs(), ksplus_retry, faults=FaultSchedule(faults))
+        assert legacy.evictions == 2
+        assert legacy.doomed == 3          # both children + grandchild
+        assert legacy.unschedulable == 4   # parent + doomed descendants
+        assert legacy.finished == 0
+        sim = ClusterSim(_nodes(), engine="fused", max_attempts=2)
+        fused = sim._run_fused(_dag_jobs(), RetrySpec("ksplus"), None, None,
+                               True, admission_backend=backend,
+                               faults=faults)
+        _assert_equivalent(legacy, fused)
+
+    def test_surviving_parent_releases_children(self):
+        """With a rejoin before the second kill, the parent survives on
+        its remaining attempts and the chain completes."""
+        faults = FaultSchedule([FaultEvent(10.0, "leave", 0),
+                                FaultEvent(50.0, "join", 0, 48.0)])
+        legacy, packed, fused = _run_three(lambda: _dag_jobs(),
+                                           faults=faults)
+        assert legacy.finished == 4 and legacy.doomed == 0
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+
+# ------------------------------------------------------ parking / starvation
+class TestParking:
+    def test_unfittable_job_parks_until_join(self):
+        def build():
+            def mk(jid, peak, L):
+                return Job(jid=jid, family="t", input_gb=1.0,
+                           mem=np.full(L, peak * 0.8), dt=1.0,
+                           plan=AllocationPlan(np.zeros(1),
+                                               np.asarray([peak])),
+                           est_runtime=float(L))
+            return [mk(0, 40.0, 50), mk(1, 10.0, 30)]
+        faults = FaultSchedule([FaultEvent(5.0, "leave", 0),
+                                FaultEvent(5.0, "leave", 1),
+                                FaultEvent(100.0, "join", 1, 64.0)])
+        legacy, packed, fused = _run_three(build, faults=faults)
+        assert legacy.starvation_s > 0      # the 40 GB job waited
+        assert legacy.finished == 2         # ...but completed after join
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+    def test_never_rejoined_job_counts_starved(self):
+        def build():
+            return [Job(jid=0, family="t", input_gb=1.0,
+                        mem=np.full(30, 30.0), dt=1.0,
+                        plan=AllocationPlan(np.zeros(1), np.asarray([40.0])),
+                        est_runtime=30.0)]
+        faults = FaultSchedule([FaultEvent(5.0, "leave", 0),
+                                FaultEvent(5.0, "leave", 1)])
+        legacy, packed, fused = _run_three(build, faults=faults)
+        assert legacy.starved == 1 and legacy.finished == 0
+        assert legacy.unschedulable == 0    # parked, not failed
+        _assert_equivalent(legacy, packed)
+        _assert_equivalent(legacy, fused)
+
+
+# ------------------------------------------------------------- loud errors
+class TestUnknownNode:
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_leave_unknown_node_raises(self, engine):
+        retry = ksplus_retry if engine == "legacy" else RetrySpec("ksplus")
+        with pytest.raises(KeyError, match="node 77"):
+            ClusterSim(_nodes(), engine=engine).run(
+                _workload(6, seed=0), retry,
+                faults=[FaultEvent(5.0, "leave", 77)])
+
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_double_leave_raises(self, engine):
+        retry = ksplus_retry if engine == "legacy" else RetrySpec("ksplus")
+        with pytest.raises(KeyError, match="node 0"):
+            ClusterSim(_nodes(), engine=engine).run(
+                _workload(6, seed=0), retry,
+                faults=[FaultEvent(5.0, "leave", 0),
+                        FaultEvent(6.0, "leave", 0)])
+
+    @pytest.mark.parametrize("engine", ["legacy", "packed", "fused"])
+    def test_join_active_node_raises(self, engine):
+        retry = ksplus_retry if engine == "legacy" else RetrySpec("ksplus")
+        with pytest.raises(ValueError, match="already active"):
+            ClusterSim(_nodes(), engine=engine).run(
+                _workload(6, seed=0), retry,
+                faults=[FaultEvent(5.0, "join", 1, 8.0)])
+
+
+# ------------------------------------------------------------------- suite
+class TestSuite:
+    def test_grid_shape_and_names(self):
+        cases = make_suite(seeds=(0, 1))
+        assert len(cases) == 3 * 3 * 3 * 2
+        assert cases[0].name == "burst_arrival/none/none/s0"
+        with pytest.raises(KeyError):
+            make_suite(scenarios=("nope",))
+        with pytest.raises(ValueError):
+            make_suite(faults=("quake",))
+
+    def test_smoke_grid_checks_oracle(self):
+        cases = [SuiteCase("burst_arrival", "poisson", "storm", seed=0),
+                 SuiteCase("deep_chain", "none", "churn", seed=0),
+                 SuiteCase("wide_fanout", "diurnal", "none", seed=0)]
+        rows = run_suite(cases, n_tasks=32, check_oracle=True)
+        assert [r["case"] for r in rows] == [c.name for c in cases]
+        assert all(r["finished"] + r["unschedulable"] + r["starved"]
+                   == r["jobs"] for r in rows)
+        table = suite_table(rows)
+        assert "burst_arrival/poisson/storm/s0" in table
+        assert "evictions" in table.splitlines()[0]
