@@ -1,0 +1,122 @@
+"""Bench-regression guard: fresh BENCH_*.json vs committed baselines.
+
+The perf job snapshots the committed ``BENCH_*.json`` files before
+re-running the benchmarks, then calls this script to compare the fresh
+dumps against the snapshot:
+
+    python -m benchmarks.check_regression --baseline /tmp/bench_baseline
+
+Three families of keys are guarded (everything else — raw ``*_us``
+timings, counts, payload tables — is reported but never gated, because
+absolute wall-clock on shared CI runners is too noisy to fail on):
+
+* ``*_speedup_x`` — higher is better; fails when a fresh value drops
+  more than ``--tolerance`` (default 20%) below its baseline;
+* ``*_overhead_x`` / ``*_dispatches_per_drain`` — lower is better;
+  fails when a fresh value rises more than ``--tolerance`` above
+  baseline;
+* boolean correctness keys (``*_match`` / ``*_ok`` / ``*_bitwise``) —
+  fail on any True -> False flip, tolerance-free.
+
+Keys present only in the fresh dump (new benchmarks) or only in the
+baseline (renamed/removed) are listed as informational, not failures —
+the guard gates regressions, not schema churn.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+HIGHER_BETTER = ("_speedup_x",)
+LOWER_BETTER = ("_overhead_x", "_dispatches_per_drain")
+BOOL_SUFFIXES = ("_match", "_ok", "_bitwise")
+
+
+def _load(d: str) -> dict:
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+        with open(fn) as f:
+            try:
+                data = json.load(f)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"unreadable bench dump {fn}: {e}")
+        for k, v in data.items():
+            out[k] = (os.path.basename(fn), v)
+    return out
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float):
+    failures, notes = [], []
+    for key, (src, base_v) in sorted(baseline.items()):
+        if key not in fresh:
+            notes.append(f"  - {key} ({src}): missing from fresh run")
+            continue
+        new_v = fresh[key][1]
+        if any(key.endswith(s) for s in BOOL_SUFFIXES):
+            if base_v is True and new_v is not True:
+                failures.append(
+                    f"  ! {key} ({src}): correctness flip "
+                    f"{base_v} -> {new_v}")
+            continue
+        if not isinstance(base_v, (int, float)) or isinstance(base_v, bool):
+            continue
+        if any(key.endswith(s) for s in HIGHER_BETTER):
+            floor = base_v * (1.0 - tolerance)
+            if new_v < floor:
+                failures.append(
+                    f"  ! {key} ({src}): {new_v:.3f} < {floor:.3f} "
+                    f"(baseline {base_v:.3f}, -{tolerance:.0%} floor)")
+        elif any(key.endswith(s) for s in LOWER_BETTER):
+            ceil = base_v * (1.0 + tolerance)
+            if new_v > ceil:
+                failures.append(
+                    f"  ! {key} ({src}): {new_v:.3f} > {ceil:.3f} "
+                    f"(baseline {base_v:.3f}, +{tolerance:.0%} ceiling)")
+    for key, (src, _) in sorted(fresh.items()):
+        if key not in baseline:
+            notes.append(f"  + {key} ({src}): new key (not gated)")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json "
+                         "snapshot")
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding the freshly generated dumps "
+                         "(default: cwd)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative regression (default 0.2 = 20%%)")
+    args = ap.parse_args()
+
+    baseline = _load(args.baseline)
+    fresh = _load(args.fresh)
+    if not baseline:
+        raise SystemExit(f"no BENCH_*.json under --baseline {args.baseline}")
+    if not fresh:
+        raise SystemExit(f"no BENCH_*.json under --fresh {args.fresh}")
+
+    failures, notes = compare(baseline, fresh, args.tolerance)
+    gated = [k for k in baseline
+             if any(k.endswith(s) for s in
+                    HIGHER_BETTER + LOWER_BETTER + BOOL_SUFFIXES)]
+    print(f"bench-regression guard: {len(gated)} gated keys, "
+          f"tolerance {args.tolerance:.0%}")
+    if notes:
+        print("notes:")
+        print("\n".join(notes))
+    if failures:
+        print("FAILURES:")
+        print("\n".join(failures))
+        return 1
+    print("OK — no gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -212,6 +212,30 @@ def bench_fleet_sim(full: bool):
          f"fleet {100 * red_f:.1f}% vs oracle {100 * red_o:.1f}% "
          f"(ks+ vs best baseline)")
 
+    # Pallas-probe row: the same replay (one method) through the
+    # `oom_probe` kernel — interpret mode off-TPU, so a real-HBM run is
+    # one flag (the backend auto-resolves to the compiled kernel there).
+    import jax
+    pb = "pallas" if jax.default_backend() == "tpu" else "pallas-interpret"
+
+    def one_method_replay(backend):
+        parts = [
+            packed_predict(fitted[f]["ks+"], [e.input_gb for e in test[f]])
+            for f in train if test[f]
+        ]
+        jobs = [(concat_packed(parts),
+                 fitted[next(iter(train))]["ks+"].retry_spec)]
+        return simulate_fleet_many(jobs, traces, 1.0,
+                                   machine_memory=machine,
+                                   backend=backend)[0]
+
+    jres, us_j = _timed(lambda: one_method_replay("jnp"), repeat=1)
+    pres, us_p = _timed(lambda: one_method_replay(pb), repeat=1)
+    werr = float(np.max(np.abs(pres.wastage_gbs - jres.wastage_gbs)))
+    att_ok = bool(np.array_equal(pres.attempts, jres.attempts))
+    _row(f"fleet_sim_{pb.replace('-', '_')}_us", us_p,
+         f"jnp={us_j:.0f}us max|dw|={werr:.2e} attempts_match={att_ok}")
+
 
 # ------------------------------------------------------------- online_replay
 def bench_online_replay(full: bool):
@@ -625,6 +649,150 @@ def bench_workload_replay(full: bool):
         }, f, indent=1)
 
 
+# ---------------------------------------------------------------------- drain
+def bench_drain(full: bool):
+    """Device-resident drain vs the host fused drain (BENCH_drain.json).
+
+    Three measurements:
+
+    * replay timing — the ``workload_replay`` DAG through the fused
+      engine with ``drain="host"`` vs the default ``drain="device"``,
+      placements asserted bitwise;
+    * dispatch accounting — :class:`AdmissionState` stats over a
+      multi-drain protocol run: the device path must report exactly ONE
+      jitted dispatch per drain (the tentpole invariant; queues wider
+      than ``DRAIN_CAP`` first shrink through the candidate pre-filter,
+      and a pre-filter that finds nothing skips the program entirely);
+    * sharding — a 2-shard ``shard_map`` drain (subprocess with 8 forced
+      host devices; the main process keeps its single-device view) must
+      match the unsharded drain's placements decision-for-decision.
+    """
+    import subprocess
+    import sys as _sys
+
+    from repro.core import RetrySpec
+    from repro.core.envelope import PAD_START, alloc_at_packed
+    from repro.sched import ClusterSim, Node
+    from repro.sched.admission import AdmissionState
+    from repro.workloads import scenarios
+
+    def nodes():
+        return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0), Node(3, 96.0)]
+
+    n = 1024 if full else 600
+    wf = scenarios.get("workload_replay", n_tasks=n, seed=0)
+
+    def replay(drain):
+        return ClusterSim(nodes(), engine="fused", drain=drain).run(
+            wf.to_jobs(under_frac=0.2, seed=0), RetrySpec("ksplus"))
+
+    dres, us_d = _timed(lambda: replay("device"), repeat=3)
+    hres, us_h = _timed(lambda: replay("host"), repeat=1, warmup=False)
+    match = dres.placements == hres.placements
+
+    def lanes_for(adm, rng, B):
+        K, G = adm.K, adm.G
+        starts = np.full((B, K), PAD_START)
+        peaks = np.zeros((B, K))
+        grid = np.linspace(0.0, rng.uniform(30, 120, B), G, axis=1)
+        for i in range(B):
+            k = int(rng.integers(1, K + 1))
+            starts[i, :k] = np.sort(np.concatenate(
+                [[0.0], rng.uniform(1.0, 60.0, k - 1)]))
+            peaks[i, :k] = np.sort(rng.uniform(2.0, 20.0, k))
+            peaks[i, k:] = peaks[i, k - 1]
+        need = alloc_at_packed(starts, peaks, grid)
+        return adm.add_lanes(starts, peaks, need, grid,
+                             dur=rng.uniform(20.0, 100.0, B))
+
+    adm = AdmissionState((48.0, 64.0, 32.0, 96.0), K=3, G=16,
+                         backend="fused")
+    remaining = list(lanes_for(adm, np.random.default_rng(0), 64))
+    for now in (0.0, 10.0, 40.0, 90.0):
+        placed = adm.drain(now, remaining)
+        done = {ji for ji, _ in placed}
+        remaining = [ji for ji in remaining if ji not in done]
+    per_drain = adm.stats["drain_dispatches"] / adm.stats["drains"]
+
+    shard_code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+from repro.core.envelope import PAD_START, alloc_at_packed
+from repro.sched.admission import AdmissionState
+
+def build(shard):
+    rng = np.random.default_rng(5)
+    caps = tuple(rng.uniform(24.0, 96.0, 16))
+    adm = AdmissionState(caps, K=3, G=16, backend="fused", shard=shard)
+    B, K, G = 96, adm.K, adm.G
+    starts = np.full((B, K), PAD_START)
+    peaks = np.zeros((B, K))
+    grid = np.linspace(0.0, rng.uniform(30, 120, B), G, axis=1)
+    for i in range(B):
+        k = int(rng.integers(1, K + 1))
+        starts[i, :k] = np.sort(np.concatenate(
+            [[0.0], rng.uniform(1.0, 60.0, k - 1)]))
+        peaks[i, :k] = np.sort(rng.uniform(2.0, 20.0, k))
+        peaks[i, k:] = peaks[i, k - 1]
+    need = alloc_at_packed(starts, peaks, grid)
+    lanes = adm.add_lanes(starts, peaks, need, grid,
+                          dur=rng.uniform(20.0, 100.0, B))
+    return adm, list(lanes)
+
+out, us = {}, {}
+for shard in (None, 2):
+    adm, lanes = build(shard)
+    adm.drain(0.0, lanes)            # compile
+    adm, lanes = build(shard)        # fresh state, warm kernel cache
+    t0 = time.perf_counter()
+    out[shard] = adm.drain(0.0, lanes)
+    us[shard] = (time.perf_counter() - t0) * 1e6
+    assert adm.stats["drain_dispatches"] == 1
+print(json.dumps({
+    "match": out[None] == out[2],
+    "placed": len(out[None]),
+    "us_sharded": us[2],
+    "us_unsharded": us[None],
+}))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run([_sys.executable, "-c", shard_code],
+                          capture_output=True, text=True, env=env,
+                          timeout=540)
+    if proc.returncode != 0:
+        raise RuntimeError(f"sharded drain subprocess failed:\n"
+                           f"{proc.stderr[-4000:]}")
+    shard_out = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    _row("drain_speedup", us_d,
+         f"{us_h / us_d:.1f}x vs host drain ({n}-task DAG replay, "
+         f"placements {'bitwise' if match else 'DIVERGED'})")
+    _row("drain_host_us", us_h, f"makespan {hres.makespan:.0f}s")
+    _row("drain_dispatches_per_drain", 0.0,
+         f"{per_drain:.2f} (target 1.0, {adm.stats['drains']} drains)")
+    _row("drain_sharded", shard_out["us_sharded"],
+         f"2-shard shard_map, match={shard_out['match']}, "
+         f"{shard_out['placed']} placements, "
+         f"unsharded={shard_out['us_unsharded']:.0f}us")
+    with open("BENCH_drain.json", "w") as f:
+        json.dump({
+            "drain_replay_tasks": n,
+            "drain_speedup_x": us_h / us_d,
+            "drain_device_us": us_d,
+            "drain_host_us": us_h,
+            "drain_placements_match": bool(match),
+            "drain_dispatches_per_drain": per_drain,
+            "drain_shards": 2,
+            "drain_sharded_match": bool(shard_out["match"]),
+            "drain_sharded_placements": shard_out["placed"],
+            "drain_sharded_us": shard_out["us_sharded"],
+            "drain_unsharded_us": shard_out["us_unsharded"],
+        }, f, indent=1)
+
+
 # --------------------------------------------------------------- churn_replay
 def bench_churn_replay(full: bool):
     """Fused fault path vs the no-fault fused replay, plus the robustness
@@ -840,6 +1008,7 @@ BENCHES = {
     "cluster_sim": bench_cluster_sim,
     "admission": bench_admission,
     "workload_replay": bench_workload_replay,
+    "drain": bench_drain,
     "churn_replay": bench_churn_replay,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,

@@ -626,7 +626,7 @@ def _bucket(b: int, lo: int = 8) -> int:
 
 
 def pad_lane_axis(arrs: Sequence[np.ndarray], fills: Sequence,
-                  lo: int = 8, fine: bool = False) -> tuple:
+                  lo: int = 8, fine: bool = False, sub: int = 8) -> tuple:
     """Pad every array's leading (lane) axis to a shared bucket size.
 
     The compaction trick shared by the fleet retry engine and the fused
@@ -634,16 +634,18 @@ def pad_lane_axis(arrs: Sequence[np.ndarray], fills: Sequence,
     pad the lane axis to a bucketed size so the jitted consumers see a
     bounded set of shapes instead of one compile per lane count.
     ``fine=False`` pads to the next power of two (log2-many shapes, up to
-    ~2x padding); ``fine=True`` pads to the next multiple of 1/8th of the
-    next power of two (8 shapes per octave, <= 25% worst-case padding
-    waste — for the admission engine's deep queues, where a 2x pad would
-    double the per-dispatch work).
+    ~2x padding); ``fine=True`` pads to the next multiple of 1/``sub`` of
+    the next power of two (``sub`` shapes per octave; the default 8 gives
+    <= 25% worst-case padding waste — for the admission engine's deep
+    queues, where a 2x pad would double the per-dispatch work).  Callers
+    whose lane count wanders across octaves every dispatch can lower
+    ``sub`` to trade padding waste for fewer compiled shapes.
     ``fills[i]`` is the pad value for ``arrs[i]``; dtypes are preserved.
     """
     B = int(arrs[0].shape[0])
     Bp = _bucket(B, lo)
     if fine and Bp > lo:
-        step = max(Bp // 8, lo)
+        step = max(Bp // sub, lo)
         Bp = ((B + step - 1) // step) * step
     if Bp == B:
         return tuple(arrs)

@@ -83,6 +83,17 @@ __all__ = ["AdmissionState"]
 _KERNEL_CACHE = {}
 
 
+def _pow4(n: int) -> int:
+    """Round ``n`` up to a power of 4 (1, 4, 16, 64, ...).
+
+    Run-axis bucket for the fused kernels: coarser than pow2 on
+    purpose — halving the number of distinct compiled shapes costs at
+    most 2x padding on an axis these kernels reduce over cheaply.
+    """
+    b = max(n - 1, 0).bit_length()
+    return 1 << (b + (b & 1))
+
+
 def _fused_kernel(masked: bool):
     """Build (once) the jitted fused fits-columns program.
 
@@ -138,6 +149,294 @@ def _fused_kernel(masked: bool):
     return kernel
 
 
+def _drain_alloc_chain(rs, rp, relc):
+    """Step-function evaluation as a K-step select chain (shared with the
+    columns kernel: with ascending starts, the last satisfied
+    ``starts_k <= t`` wins) — ``(L, K) x (L, M) -> (L, M)``."""
+    import jax.numpy as jnp
+    alloc = jnp.broadcast_to(rp[:, 0:1], relc.shape)
+    for k in range(1, rs.shape[1]):
+        alloc = jnp.where(rs[:, k:k + 1] <= relc, rp[:, k:k + 1], alloc)
+    return alloc
+
+
+def _drain_kernel(masked: bool, select: str):
+    """Build (once) the jitted one-dispatch greedy drain program.
+
+    A full event's admission — including multi-placement drains — is ONE
+    dispatch: a ``lax.while_loop`` over the device-resident state whose
+    carry holds the residual tensor ``resid[n, q, g]`` and the packed
+    placement list.  Each iteration:
+
+    1. recomputes ``fits[n, q]`` from the carried residuals (the in-loop
+       equivalent of refreshing every invalidated fits entry),
+    2. places a maximal *order-preserving independent prefix* of the
+       queue in one step — the batched top-k fast path.  Residual
+       monotonicity (placements only shrink residuals) proves the picks
+       independent: walking lanes in queue order, every fitting lane
+       whose fitting-node set is disjoint from the nodes already used
+       *this iteration* would be chosen identically by the sequential
+       greedy, because none of the entries its decision reads have
+       changed.  The prefix stops at the first fitting lane whose fit
+       set intersects a used node — its decision could differ after the
+       update, so it is re-evaluated next iteration,
+    3. scatter-subtracts each placed lane's windowed envelope from its
+       node's residual rows and clears the lane's active bit,
+
+    until no queued lane fits.  The placed lanes' admission times are
+    scatter-written into the donated ``admit_t`` buffer in the same
+    dispatch, so the host does zero follow-up device work per drain.
+
+    Callers shrink the lane axis before dispatching: residual
+    monotonicity means a lane that does not fit any node on the *base*
+    residuals can never place within the drain, so
+    :meth:`AdmissionState.drain` restricts the dispatch to the lanes the
+    (incrementally refreshed) fits cache marks as fitting somewhere —
+    the while-loop then runs over a handful of candidate lanes instead
+    of the whole queue.  The restriction is exact, not approximate: unfit
+    lanes contribute nothing to the independent-prefix bookkeeping (their
+    ``onehot``/``conflict`` entries are identically False), so the placed
+    set and order are bitwise those of the full-queue program.
+
+    ``select`` (static) picks the node rule: ``"first"`` — first fitting
+    node in row order (the ClusterSim greedy; device ``argmax`` over the
+    boolean column, identical tie-break to ``np.argmax``) — or
+    ``"headroom"`` — most post-placement head-room ``minresid - peak``,
+    first on ties (the ElasticPlanner rule).
+    """
+    key = ("drain", masked, select)
+    if key in _KERNEL_CACHE:
+        return _KERNEL_CACHE[key]
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def kernel(starts, peaks, admit_t, dur, need, grid,
+               caps, node_valid, run_idx, run_valid,
+               q_idx, q_valid, now, tol):
+        N, R = run_idx.shape
+        Q = q_idx.shape[0]
+        G = grid.shape[1]
+        B = starts.shape[0]
+        # Base residuals from the current residents — elementwise the
+        # same float64 program as the columns kernel.
+        flat = run_idx.reshape(-1)
+        rs = starts[flat]
+        rp = peaks[flat]
+        rt0 = admit_t[flat]
+        tabs = (now + grid[q_idx]).reshape(-1)        # (Q*G,) absolute
+        rel = tabs[None, :] - rt0[:, None]
+        alloc = _drain_alloc_chain(rs, rp, jnp.maximum(rel, 0.0))
+        if masked:
+            rdur = dur[flat]
+            active0 = (rel >= 0.0) & (rel < rdur[:, None] + 1e-9)
+            alloc = jnp.where(active0, alloc, 0.0)
+        alloc = jnp.where(run_valid.reshape(-1)[:, None], alloc, 0.0)
+        usage = alloc.reshape(N, R, -1).sum(axis=1)
+        resid0 = (caps[:, None] - usage).reshape(N, Q, G)
+        need_q = need[q_idx]                          # (Q, G)
+        if select == "headroom":
+            peak_q = jnp.max(peaks[q_idx], axis=1)    # (Q,)
+        # A lane placed inside this drain has admit_t == now *exactly*,
+        # so its contribution at grid point (q, g) is evaluated at
+        # rel = (now + grid[q, g]) - now — kept in this form (not
+        # simplified to grid[q, g]) so the arithmetic matches what the
+        # columns kernel computes for that resident afterwards, bitwise.
+        prel = tabs - now
+        prelc = jnp.maximum(prel, 0.0)
+        nrange = jnp.arange(N, dtype=jnp.int32)
+        qrange = jnp.arange(Q, dtype=jnp.int32)
+
+        def cond(st):
+            return ~st[5]
+
+        def body(st):
+            resid, active, out_lane, out_node, count, _ = st
+            fits = jnp.all(need_q[None, :, :] <= resid + tol, axis=-1)
+            fits = fits & node_valid[:, None] & active[None, :]
+            anyfit = fits.any(axis=0)                 # (Q,)
+            done = ~anyfit.any()
+            if select == "first":
+                node_q = jnp.argmax(fits, axis=0).astype(jnp.int32)
+            else:
+                head = resid.min(axis=-1) - peak_q[None, :]
+                node_q = jnp.argmax(
+                    jnp.where(fits, head, -jnp.inf), axis=0
+                ).astype(jnp.int32)
+            # Order-preserving independent prefix: optimistically every
+            # fitting lane before the first whose fit set touches an
+            # already-used node.  Before that first conflict the
+            # optimistic used-set equals the sequential one, so the cut
+            # point (and every placement before it) is exact.
+            onehot = (nrange[:, None] == node_q[None, :]) & anyfit[None, :]
+            before = (jnp.cumsum(onehot, axis=1, dtype=jnp.int32)
+                      - onehot.astype(jnp.int32)) > 0
+            conflict = anyfit & (fits & before).any(axis=0)
+            first_conf = jnp.where(conflict.any(),
+                                   jnp.argmax(conflict).astype(jnp.int32),
+                                   jnp.int32(Q))
+            place = anyfit & (qrange < first_conf) & ~done
+            pos = count + jnp.cumsum(place, dtype=jnp.int32) - 1
+            slot = jnp.where(place, pos, Q)
+            out_lane = out_lane.at[slot].set(q_idx, mode="drop")
+            out_node = out_node.at[slot].set(node_q, mode="drop")
+            count = count + place.sum(dtype=jnp.int32)
+            # Scatter-subtract the placed envelopes: at most one lane per
+            # node per iteration by construction (a second lane fitting a
+            # used node is past the conflict cut), so a node -> queue-col
+            # scatter is collision-free.
+            col = jnp.full((N,), Q, jnp.int32).at[
+                jnp.where(place, node_q, N)].set(qrange, mode="drop")
+            hasl = col < Q
+            gl = q_idx[jnp.where(hasl, col, 0)]
+            pal = _drain_alloc_chain(
+                starts[gl], peaks[gl],
+                jnp.broadcast_to(prelc[None, :], (N, prelc.shape[0])))
+            if masked:
+                pact = (prel[None, :] >= 0.0) \
+                    & (prel[None, :] < dur[gl][:, None] + 1e-9)
+                pal = jnp.where(pact, pal, 0.0)
+            pal = jnp.where(hasl[:, None], pal, 0.0)
+            resid = resid - pal.reshape(N, Q, G)
+            active = active & ~place
+            return (resid, active, out_lane, out_node, count, done)
+
+        init = (resid0, q_valid, jnp.full((Q,), B, jnp.int32),
+                jnp.zeros((Q,), jnp.int32), jnp.int32(0), jnp.bool_(False))
+        _, _, out_lane, out_node, count, _ = lax.while_loop(cond, body, init)
+        # Same-dispatch admit-time scatter: unused slots keep the
+        # out-of-range fill B and drop.
+        admit_new = admit_t.at[out_lane].set(now, mode="drop")
+        return out_lane, out_node, count, admit_new
+
+    _KERNEL_CACHE[key] = kernel
+    return kernel
+
+
+def _drain_kernel_sharded(masked: bool, select: str, shard: int):
+    """Node-sharded drain: ``shard_map`` over the node axis of the fits
+    matrix — nodes sharded, queued lanes replicated.
+
+    Each shard carries its local residual block ``(N/shard, Q, G)``; per
+    iteration the global "first fitting (queue-order, node-order) pair"
+    is found with two collectives: a vectorized ``psum`` OR-reduction
+    over the node axis for per-lane any-fit, then a ``pmin`` min-index
+    reduction for the winning node (for ``select="headroom"``: ``pmax``
+    of the head-room then ``pmin`` of the indices attaining it —
+    first-on-ties, matching ``np.argmax``).  The owning shard
+    scatter-subtracts the placed envelope from its local block; the
+    packed placement list is replicated.  One placement per iteration —
+    selection is globally ordered, so the single-device batched-prefix
+    fast path is not needed for correctness, and placements match the
+    unsharded program bitwise (per-node arithmetic is identical; only
+    node *selection* is distributed, and it reduces over exact indices).
+    """
+    key = ("drain_sharded", masked, select, shard)
+    if key in _KERNEL_CACHE:
+        return _KERNEL_CACHE[key]
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()[:shard]), ("nodes",))
+
+    def core(starts, peaks, admit_t, dur, need, grid, caps, node_valid,
+             run_idx, run_valid, q_idx, q_valid, now, tol):
+        Nl, R = run_idx.shape
+        Q = q_idx.shape[0]
+        G = grid.shape[1]
+        B = starts.shape[0]
+        off = lax.axis_index("nodes").astype(jnp.int32) * Nl
+        flat = run_idx.reshape(-1)
+        rs = starts[flat]
+        rp = peaks[flat]
+        rt0 = admit_t[flat]
+        tabs = (now + grid[q_idx]).reshape(-1)
+        rel = tabs[None, :] - rt0[:, None]
+        alloc = _drain_alloc_chain(rs, rp, jnp.maximum(rel, 0.0))
+        if masked:
+            rdur = dur[flat]
+            active0 = (rel >= 0.0) & (rel < rdur[:, None] + 1e-9)
+            alloc = jnp.where(active0, alloc, 0.0)
+        alloc = jnp.where(run_valid.reshape(-1)[:, None], alloc, 0.0)
+        usage = alloc.reshape(Nl, R, -1).sum(axis=1)
+        resid0 = (caps[:, None] - usage).reshape(Nl, Q, G)
+        need_q = need[q_idx]
+        if select == "headroom":
+            peak_q = jnp.max(peaks[q_idx], axis=1)
+        prel = tabs - now
+        prelc = jnp.maximum(prel, 0.0)
+        big = jnp.int32(Nl * shard)
+        gidx = off + jnp.arange(Nl, dtype=jnp.int32)
+
+        def cond(st):
+            return ~st[5]
+
+        def body(st):
+            resid, active, out_lane, out_node, count, _ = st
+            fits = jnp.all(need_q[None, :, :] <= resid + tol, axis=-1)
+            fits = fits & node_valid[:, None] & active[None, :]
+            anyfit = lax.psum(fits.any(axis=0).astype(jnp.int32),
+                              "nodes") > 0
+            done = ~anyfit.any()
+            qsel = jnp.argmax(anyfit).astype(jnp.int32)
+            colf = fits[:, qsel]
+            if select == "first":
+                nsel = lax.pmin(jnp.where(colf, gidx, big).min(), "nodes")
+            else:
+                minres = resid[:, qsel, :].min(axis=-1)
+                head = jnp.where(colf, minres - peak_q[qsel], -jnp.inf)
+                best = lax.pmax(head.max(), "nodes")
+                nsel = lax.pmin(
+                    jnp.where(colf & (head == best), gidx, big).min(),
+                    "nodes")
+            place = ~done
+            slot = jnp.where(place, count, Q)
+            out_lane = out_lane.at[slot].set(q_idx[qsel], mode="drop")
+            out_node = out_node.at[slot].set(nsel, mode="drop")
+            gl = q_idx[qsel]
+            pal = _drain_alloc_chain(starts[gl][None], peaks[gl][None],
+                                     prelc[None, :])
+            if masked:
+                pact = (prel >= 0.0) & (prel < dur[gl] + 1e-9)
+                pal = jnp.where(pact[None, :], pal, 0.0)
+            lrow = nsel - off
+            own = place & (lrow >= 0) & (lrow < Nl)
+            resid = resid.at[jnp.where(own, lrow, Nl)].add(
+                -pal.reshape(Q, G), mode="drop")
+            active = active.at[jnp.where(place, qsel, Q)].set(
+                False, mode="drop")
+            count = count + place.astype(jnp.int32)
+            return (resid, active, out_lane, out_node, count, done)
+
+        init = (resid0, q_valid, jnp.full((Q,), B, jnp.int32),
+                jnp.zeros((Q,), jnp.int32), jnp.int32(0), jnp.bool_(False))
+        _, _, out_lane, out_node, count, _ = lax.while_loop(
+            cond, body, init)
+        return out_lane, out_node, count
+
+    smapped = shard_map(
+        core, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(), P("nodes"), P("nodes"),
+                  P("nodes"), P("nodes"), P(), P(), P(), P()),
+        out_specs=(P(), P(), P()), check_rep=False)
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def kernel(starts, peaks, admit_t, dur, need, grid, caps, node_valid,
+               run_idx, run_valid, q_idx, q_valid, now, tol):
+        out_lane, out_node, count = smapped(
+            starts, peaks, admit_t, dur, need, grid, caps, node_valid,
+            run_idx, run_valid, q_idx, q_valid, now, tol)
+        admit_new = admit_t.at[out_lane].set(now, mode="drop")
+        return out_lane, out_node, count, admit_new
+
+    _KERNEL_CACHE[key] = kernel
+    return kernel
+
+
 def _scatter_rows_fn():
     """Donated-buffer row scatter: the in-place device update primitive."""
     if "scatter" in _KERNEL_CACHE:
@@ -168,11 +467,37 @@ class AdmissionState:
     count-forever residual (``usage_over`` with ``dur=None``).
     """
 
+    # Max candidate lanes per drain dispatch.  Deep backlogs routinely
+    # have hundreds of lanes that *fit somewhere* while capacity admits
+    # only a few — capping the dispatch keeps the while-loop program's
+    # queue axis (and its padded pow2 bucket) small; the exact
+    # continuation loop in :meth:`drain` re-dispatches in the rare case
+    # more than DRAIN_CAP lanes were simultaneously placeable.  Queues
+    # at or below the cap skip the candidate pre-filter and go straight
+    # into the program: one dispatch per drain, no refresh round-trip.
+    DRAIN_CAP = 256
+
     def __init__(self, caps: Sequence[float], K: int, G: int,
                  backend: str = "fused", use_dur: bool = True,
-                 tol: float = 1e-9):
+                 tol: float = 1e-9, shard: Optional[int] = None):
         if backend not in ("fused", "numpy"):
             raise ValueError(f"unknown admission backend: {backend!r}")
+        if shard is not None:
+            if backend != "fused":
+                raise ValueError("shard= requires backend='fused'")
+            shard = int(shard)
+            if shard < 1:
+                raise ValueError(f"shard must be >= 1, got {shard}")
+            import jax
+            have = len(jax.devices())
+            if have < shard:
+                raise ValueError(
+                    f"shard={shard} needs {shard} devices but only {have} "
+                    f"are visible — set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={shard} "
+                    f"before jax initializes its backend")
+        self.shard = shard
+        self.stats = {"drains": 0, "drain_dispatches": 0}
         self.backend = backend
         self.use_dur = bool(use_dur)
         self.tol = float(tol)
@@ -309,11 +634,14 @@ class AdmissionState:
         return bool(self.valid[ni, lane])
 
     # ---------------------------------------------------------------- refresh
-    def columns(self, now: float, lanes: Sequence[int]) -> np.ndarray:
+    def columns(self, now: float, lanes: Sequence[int],
+                sub: int = 8) -> np.ndarray:
         """Fits matrix slice ``(N, len(lanes))``, refreshed where invalid.
 
         One fused dispatch per call on the jitted backend: every invalid
         ``(node, lane)`` entry across all nodes is recomputed at once.
+        ``sub`` sets the lane-bucket subdivision (see
+        :func:`repro.core.fleet.pad_lane_axis`).
         """
         self.sync_now(now)
         lanes = np.asarray(lanes, np.int64)
@@ -324,7 +652,7 @@ class AdmissionState:
             if self.backend == "numpy":
                 self._refresh_numpy(nodes, todo)
             else:
-                self._refresh_fused(nodes, todo)
+                self._refresh_fused(nodes, todo, sub)
             self.valid[np.ix_(nodes, todo)] = True
         return self.fits[:, lanes]
 
@@ -386,7 +714,8 @@ class AdmissionState:
                 self._dadmit, jnp.asarray(np.asarray([lane], np.int32)),
                 jnp.asarray(self.admit_t[lane:lane + 1]))
 
-    def _refresh_fused(self, nodes: np.ndarray, lanes: np.ndarray):
+    def _refresh_fused(self, nodes: np.ndarray, lanes: np.ndarray,
+                       sub: int = 8):
         """One fused XLA dispatch for every invalid (node, lane) entry.
 
         Only the stale node rows enter the dispatch — after a placement,
@@ -399,6 +728,12 @@ class AdmissionState:
         from repro.core.fleet import pad_lane_axis
 
         kernel = _fused_kernel(self.use_dur)
+        # Only wide (execution-bound) refreshes reach this kernel — the
+        # narrow compile-bound ones route to the host oracle in
+        # :meth:`columns` — so shapes stay exact: stale rows only, run
+        # axis padded pow2.  The queue axis is already coarse by the
+        # time a refresh is wide (pow2 buckets at >256 lanes), so the
+        # compiled-shape count stays small without extra padding.
         sel = [self.running[ni] for ni in nodes]
         rmax = max(max((len(r) for r in sel), default=0), 1)
         rmax = 1 << (rmax - 1).bit_length()
@@ -408,7 +743,7 @@ class AdmissionState:
             run_idx[i, :len(run)] = run
             run_valid[i, :len(run)] = True
         (q_idx,) = pad_lane_axis(
-            (np.asarray(lanes, np.int32),), (0,), lo=8, fine=True)
+            (np.asarray(lanes, np.int32),), (0,), lo=8, fine=True, sub=sub)
         nq = len(lanes)
         with enable_x64():
             if self._dirty_dev:
@@ -421,3 +756,187 @@ class AdmissionState:
                 jnp.float64(self._now), jnp.float64(self.tol))
         self.fits[np.ix_(nodes, lanes)] = np.asarray(fits)[:, :nq]
         self.minresid[np.ix_(nodes, lanes)] = np.asarray(minresid)[:, :nq]
+
+    # ------------------------------------------------------------------ drain
+    def drain(self, now: float, lanes: Sequence[int],
+              select: str = "first") -> List[tuple]:
+        """Greedy drain at ``now`` over ``lanes`` (queue order): place
+        lanes until none fits, returning ``[(lane, node_row), ...]`` in
+        decision order.
+
+        On the fused backend this is ONE device dispatch for the whole
+        drain — the jitted while-loop program of :func:`_drain_kernel`
+        (node-sharded via :func:`_drain_kernel_sharded` when the state
+        was built with ``shard=``), including the donated-buffer
+        admit-time scatter for every placement.  On the numpy backend it
+        is the host reference loop over :meth:`columns` — the oracle the
+        device program is differentially pinned against.
+
+        ``select="first"`` is the ClusterSim rule (first fitting node in
+        row order); ``select="headroom"`` is the ElasticPlanner rule
+        (most post-placement head-room, first on ties).  Decision
+        equivalence with the sequential greedy holds because placements
+        only shrink residuals: an unfit lane can never become fit within
+        one drain, and a fitting lane whose fitting-node set is disjoint
+        from the drain's earlier placements reads only unchanged state.
+
+        Queue routing (fused, unsharded): a queue of at most
+        ``DRAIN_CAP`` lanes — a DAG dependency frontier, an elastic
+        re-admission batch — goes straight into the program, whole:
+        exactly one dispatch per drain, no refresh round-trip, and the
+        per-dispatch cost is bounded by the cap's pow2 bucket.  A wider
+        backlog first runs the candidate pre-filter: base-residual fits
+        of the whole queue from :meth:`columns` — the incremental,
+        validity-cached refresh, which within a same-``now`` event batch
+        recomputes only the released node's row instead of the full
+        matrix — and the program dispatches over *just the lanes that
+        fit somewhere*.  The restriction is exact by residual
+        monotonicity (placements only shrink residuals, so a lane unfit
+        on the base residuals can never place within the drain), and it
+        collapses the dispatch's queue axis from the whole backlog to
+        the handful of contenders: event-dense flat replays, where most
+        drains place nothing or one lane out of hundreds queued, run at
+        stale-row refresh cost instead of full-program cost.  The
+        sharded program keeps the full queue — its point is scaling the
+        (nodes x queue) matrix itself, and its fits stay inside the
+        ``shard_map``.
+        """
+        if select not in ("first", "headroom"):
+            raise ValueError(f"unknown drain select rule: {select!r}")
+        self.sync_now(now)
+        self.stats["drains"] += 1
+        lanes = [int(x) for x in np.asarray(lanes, np.int64).reshape(-1)]
+        if not lanes or self.N == 0:
+            return []
+        if self.backend == "numpy":
+            return self._drain_host(now, lanes, select)
+        if self.shard:
+            return self._drain_fused(now, lanes, select)
+        placed_all: List[tuple] = []
+        remaining = lanes
+        while True:
+            if len(remaining) <= self.DRAIN_CAP:
+                # Narrow queue: the whole thing is the dispatch.
+                placed_all.extend(self._drain_fused(now, remaining, select))
+                break
+            idx = np.nonzero(
+                self.columns(now, remaining).any(axis=0))[0]
+            if idx.size == 0:
+                break
+            cand = [remaining[i] for i in idx[:self.DRAIN_CAP]]
+            placed = self._drain_fused(now, cand, select)
+            placed_all.extend(placed)
+            if idx.size <= self.DRAIN_CAP or not placed:
+                # A single chunk held every candidate — the kernel's own
+                # termination condition verified exhaustion — or the
+                # kernel disagreed with the cache inside the float64
+                # grazing band (precision contract) and made no progress.
+                break
+            got = {ji for ji, _ in placed}
+            remaining = [ji for ji in remaining if ji not in got]
+        return placed_all
+
+    def _drain_host(self, now: float, lanes: List[int],
+                    select: str) -> List[tuple]:
+        """Host reference drain: the exact per-placement columns/argmax
+        loop the engines ran before the device program existed."""
+        placed: List[tuple] = []
+        if select == "first":
+            remaining = list(lanes)
+            while remaining:
+                M = self.columns(now, remaining)
+                anyfit = M.any(axis=0)
+                if not anyfit.any():
+                    break
+                col = int(np.argmax(anyfit))
+                ni = int(np.argmax(M[:, col]))
+                lane = remaining.pop(col)
+                self.place(ni, lane, now)
+                placed.append((lane, ni))
+        else:
+            for lane in lanes:
+                col = self.columns(now, [lane])[:, 0]
+                if not col.any():
+                    continue
+                head = self.minresid[:, lane] - float(self.peaks[lane].max())
+                ni = int(np.argmax(np.where(col, head, -np.inf)))
+                self.place(ni, lane, now)
+                placed.append((lane, ni))
+        return placed
+
+    def _drain_fused(self, now: float, lanes: List[int],
+                     select: str) -> List[tuple]:
+        """One-dispatch device drain (see :func:`_drain_kernel`).
+
+        The node axis is padded to a power of two (and to a multiple of
+        the shard count when sharding) with ``-1e30`` capacities and a
+        validity mask, the queue axis through the coarse pow2 buckets of
+        :func:`repro.core.fleet.pad_lane_axis` — compilation stays
+        bounded to log2-many shapes, which matters: the while-loop
+        program is the most expensive compile in the repo, and the DAG
+        replay's queue (the dependency frontier) wanders over two orders
+        of magnitude.
+
+        The program recomputes base residuals from ``running``/``caps``
+        inside the dispatch, so node churn between drains needs no
+        device-side rebuild; the placed nodes' cached True entries are
+        invalidated afterwards (monotonic rule) so the next refresh
+        recomputes exactly what a placement can have changed.
+        """
+        from jax.experimental import enable_x64
+        import jax.numpy as jnp
+
+        from repro.core.fleet import pad_lane_axis
+
+        N = self.N
+        npad = 1 << max(N - 1, 0).bit_length()
+        if self.shard:
+            npad = max(npad, self.shard)
+            npad = -(-npad // self.shard) * self.shard
+        rmax = max(max((len(r) for r in self.running), default=0), 1)
+        rmax = _pow4(rmax)
+        run_idx = np.zeros((npad, rmax), np.int32)
+        run_valid = np.zeros((npad, rmax), bool)
+        for i, run in enumerate(self.running):
+            run_idx[i, :len(run)] = run
+            run_valid[i, :len(run)] = True
+        caps = np.full((npad,), -1e30)
+        caps[:N] = self.caps
+        node_valid = np.zeros((npad,), bool)
+        node_valid[:N] = True
+        q_idx, q_valid = pad_lane_axis(
+            (np.asarray(lanes, np.int32), np.ones(len(lanes), bool)),
+            (0, False), lo=8)
+        kernel = (_drain_kernel_sharded(self.use_dur, select, self.shard)
+                  if self.shard else _drain_kernel(self.use_dur, select))
+        with enable_x64():
+            if self._dirty_dev:
+                self._dev_sync()
+            out_lane, out_node, count, admit_new = kernel(
+                self._dstarts, self._dpeaks, self._dadmit, self._ddur,
+                self._dneed, self._dgrid,
+                jnp.asarray(caps), jnp.asarray(node_valid),
+                jnp.asarray(run_idx), jnp.asarray(run_valid),
+                jnp.asarray(q_idx), jnp.asarray(q_valid),
+                jnp.float64(now), jnp.float64(self.tol))
+            self._dadmit = admit_new
+        self.stats["drain_dispatches"] += 1
+        n = int(count)
+        out_lane = np.asarray(out_lane)[:n]
+        out_node = np.asarray(out_node)[:n]
+        placed: List[tuple] = []
+        for lane, ni in zip(out_lane.tolist(), out_node.tolist()):
+            # Host bookkeeping per placement; the device-side admit_t
+            # scatter already happened inside the drain dispatch.
+            self.running[ni].append(lane)
+            self.admit_t[lane] = now
+            if self.shard:
+                self.valid[ni, :] = False
+            else:
+                # Monotonic rule (same as place()): the placement only
+                # shrank node ni's residual, so the pre-filter's cached
+                # False entries stay valid; only the Trues must be
+                # recomputed on the next refresh.
+                self.valid[ni] &= ~self.fits[ni]
+            placed.append((lane, ni))
+        return placed

@@ -246,6 +246,73 @@ class _DagFrontier:
         return count
 
 
+class _LaneQueue:
+    """Admission queue over lane indices with O(1) removal.
+
+    Replaces the fused engine's plain Python list, whose per-placement
+    ``queue.remove(ji)`` and per-event ``[q for q in queue ...]`` parking
+    rescan made a busy drain O(Q²): membership lives in a numpy index
+    mask, removals mark entries dead in O(1), and the order list compacts
+    lazily on the next :meth:`ids` snapshot — amortized linear over a
+    replay.  Order semantics match the list exactly (append at the back,
+    evicted/unparked lanes pushed to the front in their given order,
+    removals preserve the relative order of survivors), which is what
+    keeps the placement logs bitwise against the oracles.
+    """
+
+    __slots__ = ("_order", "_in", "_tok", "_dead")
+
+    def __init__(self, B: int):
+        # Each (lane, token) entry is live iff the lane is queued AND the
+        # token matches the lane's latest enqueue — a lane that is
+        # admitted, OOMs, and re-queues must NOT resurrect its stale
+        # (earlier) position in the order list.
+        self._order: List[Tuple[int, int]] = []
+        self._in = np.zeros(B, bool)
+        self._tok = np.zeros(B, np.int64)
+        self._dead = 0
+
+    def __len__(self) -> int:
+        return len(self._order) - self._dead
+
+    def append(self, ji: int):
+        self._tok[ji] += 1
+        self._order.append((ji, int(self._tok[ji])))
+        self._in[ji] = True
+
+    def push_front(self, lanes: Sequence[int]):
+        lanes = [int(ji) for ji in lanes]
+        if not lanes:
+            return
+        self._compact()
+        self._tok[lanes] += 1
+        self._order[0:0] = [(ji, int(self._tok[ji])) for ji in lanes]
+        self._in[lanes] = True
+
+    def remove(self, ji: int):
+        self._in[ji] = False
+        self._dead += 1
+
+    def remove_many(self, lanes) -> None:
+        n = 0
+        for ji in lanes:
+            self._in[int(ji)] = False
+            n += 1
+        self._dead += n
+
+    def ids(self) -> np.ndarray:
+        """Current queue order as an index array (compacts if needed)."""
+        self._compact()
+        return np.asarray([ji for ji, _ in self._order], np.int64)
+
+    def _compact(self):
+        if self._dead:
+            inq, tok = self._in, self._tok
+            self._order = [(ji, tk) for ji, tk in self._order
+                           if inq[ji] and tok[ji] == tk]
+            self._dead = 0
+
+
 @dataclasses.dataclass
 class Node:
     nid: int
@@ -316,12 +383,25 @@ class ClusterSim:
     """
 
     def __init__(self, nodes: List[Node], max_attempts: int = 20,
-                 engine: str = "fused"):
+                 engine: str = "fused", drain: str = "device",
+                 shard: Optional[int] = None):
         if engine not in ("fused", "packed", "legacy"):
             raise ValueError(f"unknown engine: {engine!r}")
+        if drain not in ("device", "host"):
+            raise ValueError(f"unknown drain mode: {drain!r}")
+        if shard is not None and drain != "device":
+            raise ValueError("shard= requires drain='device'")
         self.nodes = nodes
         self.max_attempts = max_attempts
         self.engine = engine
+        # Fused-engine drain mode: "device" folds the whole greedy drain
+        # into one jitted dispatch per event (AdmissionState.drain);
+        # "host" keeps the per-placement columns/argmax loop as the
+        # decision oracle.  ``shard`` shards the drain's node axis over
+        # that many devices (shard_map).  Both are ignored by the packed
+        # and legacy engines.
+        self.drain = drain
+        self.shard = shard
 
     # ------------------------------------------------------------------ API
     def _validate_submit(self, jobs: List[Job]) -> None:
@@ -1074,15 +1154,17 @@ class ClusterSim:
         release = np.asarray([j.release_time for j in jobs], np.float64)
         need_max = need.max(axis=1)
         adm = AdmissionState(caps, K=K, G=ADMIT_GRID,
-                             backend=admission_backend, use_dur=True)
+                             backend=admission_backend, use_dur=True,
+                             shard=self.shard)
         adm.add_lanes(starts, peaks, need, grid_rel, dur=runtimes)
+        device_drain = self.drain == "device"
         # Node rows in ``adm`` are positional; events carry the stable
         # ``nid`` and map through this list (leaves splice, joins append —
         # AdmissionState's remove_node/add_node row protocol).
         active_nids: List[int] = [n.nid for n in self.nodes]
         epoch = np.zeros((B,), np.int64)
         frontier = _DagFrontier.build(jobs)
-        queue: List[int] = []
+        queue = _LaneQueue(B)
         parked: List[int] = []
         park_t: Dict[int, float] = {}
         events: List[Tuple[float, int, str, int, object, int]] = []
@@ -1112,6 +1194,19 @@ class ClusterSim:
             heapq.heappush(events, (float(fe.t), next(seq), fe.kind,
                                     int(fe.nid), fe, 0))
 
+        def place_record(now: float, ni: int, ji: int):
+            placements.append(
+                (float(now), active_nids[ni], jobs[ji].jid))
+            v = viol[ji]
+            if v < 0:
+                heapq.heappush(events, (now + runtimes[ji], next(seq),
+                                        "done", active_nids[ni], ji,
+                                        int(epoch[ji])))
+            else:
+                heapq.heappush(events, (now + v * dts[ji], next(seq),
+                                        "oom", active_nids[ni], ji,
+                                        int(epoch[ji])))
+
         def try_admit(now: float):
             """Greedy drain on the shared fits matrix.
 
@@ -1119,40 +1214,52 @@ class ClusterSim:
             admissions only shrink residuals, so an unfit job can never
             become fit within one drain — the first fitting job in queue
             order under the current state is exactly the next job the
-            per-job scan would admit.  Each iteration refreshes the
-            invalidated entries (one fused dispatch) and picks the first
-            (job, node) pair in (queue, node) order from the matrix.
+            per-job scan would admit.
+
+            With ``drain="device"`` the whole greedy loop — fits
+            refresh, (queue, node)-order argmax, residual scatter,
+            repeat — runs inside :meth:`AdmissionState.drain`, ONE
+            jitted dispatch returning the packed placement list.  The
+            host fallback iterates here, one fused ``columns`` refresh
+            per placement, and is pinned bitwise against the device
+            path by the differential suite.
             """
-            if queue:  # park jobs no surviving node could ever fit
+            ids = queue.ids()
+            if ids.size:  # park jobs no surviving node could ever fit
                 cap_hi = float(adm.caps.max()) if adm.N else 0.0
-                for ji in [q for q in queue if need_max[q] > cap_hi + 1e-9]:
-                    queue.remove(ji)
-                    parked.append(ji)
-                    park_t[ji] = now
+                bad = need_max[ids] > cap_hi + 1e-9
+                if bad.any():
+                    drop = ids[bad]
+                    queue.remove_many(drop)
+                    for ji in drop.tolist():
+                        parked.append(ji)
+                        park_t[ji] = now
+                    ids = ids[~bad]
             adm.sync_now(now)
-            while queue:
-                adm.columns(now, queue)  # one dispatch for invalid entries
-                q = np.asarray(queue)
-                M = adm.fits[:, q]       # (N, Q) — all entries now valid
+            if device_drain:
+                if ids.size == 0 or adm.N == 0:
+                    return
+                placed = adm.drain(now, ids)
+                if placed:
+                    queue.remove_many([ji for ji, _ in placed])
+                    for ji, ni in placed:
+                        place_record(now, ni, ji)
+                return
+            alive = np.ones(ids.size, bool)
+            while alive.any():
+                cur = ids[alive]
+                adm.columns(now, cur)  # one dispatch for invalid entries
+                M = adm.fits[:, cur]   # (N, Q) — all entries now valid
                 anyfit = M.any(axis=0)
                 if not anyfit.any():
                     break
                 col = int(np.argmax(anyfit))
                 ni = int(np.argmax(M[:, col]))
-                ji = int(q[col])
+                ji = int(cur[col])
+                alive[np.nonzero(alive)[0][col]] = False
                 queue.remove(ji)
                 adm.place(ni, ji, now)
-                placements.append(
-                    (float(now), active_nids[ni], jobs[ji].jid))
-                v = viol[ji]
-                if v < 0:
-                    heapq.heappush(events, (now + runtimes[ji], next(seq),
-                                            "done", active_nids[ni], ji,
-                                            int(epoch[ji])))
-                else:
-                    heapq.heappush(events, (now + v * dts[ji], next(seq),
-                                            "oom", active_nids[ni], ji,
-                                            int(epoch[ji])))
+                place_record(now, ni, ji)
 
         def process_job_run(run_events):
             """One contiguous run of *fresh* done/oom events inside a
@@ -1306,7 +1413,7 @@ class ClusterSim:
                         unschedulable += d
                 else:
                     requeue.append(ji)
-            queue[0:0] = requeue  # evicted jobs go ahead of waiters
+            queue.push_front(requeue)  # evicted jobs go ahead of waiters
 
         def process_join(t: float, nid: int, fe: FaultEvent):
             nonlocal cap_sum, cap_integral, cap_last, starvation_s
@@ -1321,7 +1428,7 @@ class ClusterSim:
             if parked:  # unpark; the sweep re-parks misfits
                 for ji in parked:
                     starvation_s += t - park_t.pop(ji)
-                queue[0:0] = parked
+                queue.push_front(parked)
                 parked.clear()
 
         try_admit(0.0)

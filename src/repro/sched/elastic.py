@@ -109,11 +109,13 @@ class ElasticPlanner:
     precision contract in :mod:`repro.sched.admission`).
     """
 
-    def __init__(self, backend: str = "numpy"):
+    def __init__(self, backend: str = "numpy",
+                 shard: Optional[int] = None):
         self.slices: Dict[str, _Slice] = {}
         self.pending: List[Tuple[str, AllocationPlan]] = []
         self._adm = AdmissionState(
-            [], K=1, G=HORIZON_GRID, backend=backend, use_dur=False)
+            [], K=1, G=HORIZON_GRID, backend=backend, use_dur=False,
+            shard=shard)
         self._names: List[str] = []  # slice name per AdmissionState row
         self._grid = np.linspace(0.0, HORIZON_S, HORIZON_GRID)
         self._lane: Dict[str, int] = {}  # job id -> lane index
@@ -251,7 +253,27 @@ class ElasticPlanner:
     def drain(self, now: float) -> Dict[str, str]:
         """Re-run admission for every queued job, in queue order — each
         decision reads the shared fits matrix, refreshed only where the
-        invalidation protocol says it is stale."""
+        invalidation protocol says it is stale.
+
+        On ``backend="fused"`` the whole queue drains in ONE jitted
+        dispatch (:meth:`AdmissionState.drain` with the head-room node
+        rule) — decision-identical to the per-job loop because
+        placements only shrink residuals, so a job unfit at its queue
+        position can never become fit later in the same drain.  Queues
+        with duplicate job ids or resident (live re-size) resubmissions
+        fall back to the per-job loop, whose ``admit`` handles those
+        branches.
+        """
+        if self._adm.backend == "fused" and self._names and self.pending:
+            jids = [j for j, _ in self.pending]
+            resident = set()
+            for lanes in self._adm.running:
+                resident.update(lanes)
+            if (len(set(jids)) == len(jids)
+                    and all(j in self._lane
+                            and self._lane[j] not in resident
+                            for j in jids)):
+                return self._drain_device(now)
         lanes = [self._lane[j] for j, _ in self.pending if j in self._lane]
         if lanes and self._names:
             # One batched refresh for the whole queue up front; the per-job
@@ -264,6 +286,30 @@ class ElasticPlanner:
             if name is None:
                 still.append((jid, envelope))
             else:
+                placed[jid] = name
+        self.pending = still
+        return placed
+
+    def _drain_device(self, now: float) -> Dict[str, str]:
+        """Queue-order device drain: re-plan any changed envelopes (lane
+        updates are queue-local, so order cannot matter), then place the
+        whole queue in one dispatch and mirror the decisions into the
+        slice rosters."""
+        order: List[Tuple[str, AllocationPlan, int]] = []
+        for jid, envelope in self.pending:
+            self._ensure_lane(jid, envelope)
+            order.append((jid, envelope, self._lane[jid]))
+        got = dict(self._adm.drain(now, [ln for _, _, ln in order],
+                                   select="headroom"))
+        placed: Dict[str, str] = {}
+        still: List[Tuple[str, AllocationPlan]] = []
+        for jid, envelope, lane in order:
+            ni = got.get(lane)
+            if ni is None:
+                still.append((jid, envelope))
+            else:
+                name = self._names[ni]
+                self.slices[name].jobs.append((jid, envelope, now))
                 placed[jid] = name
         self.pending = still
         return placed

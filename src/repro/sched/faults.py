@@ -28,6 +28,15 @@ seed)`` always yields the same event list (``numpy.random.Generator``
 over a tagged ``SeedSequence``).  Schedules compose with ``+`` — the
 merge re-sorts by time, stably, so equal-time events keep their operand
 order.
+
+Device-drain coherence: the fused engine's default ``drain="device"``
+path (:meth:`repro.sched.admission.AdmissionState.drain`) does not read
+the host-side fits cache at all — every drain recomputes fits from the
+post-churn ``running``/``caps`` state inside the one jitted dispatch,
+so ``leave``/``join`` row splices need no device-side mask rebuild;
+only the *host* fallback path consumes the incremental invalidation
+protocol.  The churn/storm differential suites pin both paths bitwise
+(``tests/test_device_drain.py``).
 """
 
 from __future__ import annotations

@@ -1,0 +1,373 @@
+"""Device-resident drain: differential + dispatch-accounting coverage.
+
+The fused engine's default ``drain="device"`` path folds the whole
+greedy admission loop — fits refresh, (queue, node)-order argmax,
+residual scatter, repeat — into ONE jitted dispatch per event
+(:meth:`repro.sched.admission.AdmissionState.drain`).  This suite pins
+it three ways:
+
+* ``AdmissionState.drain`` unit level — fused placements must equal the
+  numpy host drain *bitwise* for both node-selection rules
+  (``"first"``/``"headroom"``), with and without durations, across
+  repeated drains, and the post-drain fits cache must stay
+  oracle-fresh;
+* engine level — ``ClusterSim(drain="device")`` must reproduce the host
+  fused drain's decision log bitwise (and the legacy engine's wastage to
+  1e-6) under DAG replay, churn/storm fault schedules, offset sweeps,
+  parking/starvation, and joins landing mid-drain;
+* scaling level — a ≥2-shard ``shard_map`` drain (subprocess with forced
+  host devices, same idiom as ``test_moe_distributed``) must match the
+  unsharded device drain and the numpy drain decision-for-decision.
+
+Dispatch accounting rides along: ``AdmissionState.stats`` must report
+exactly one dispatch per device drain — the tentpole's whole point.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import AllocationPlan, RetrySpec
+from repro.sched import (
+    ClusterSim,
+    ElasticPlanner,
+    FaultEvent,
+    FaultSchedule,
+    Job,
+    Node,
+    OffsetCandidate,
+)
+from repro.sched.admission import AdmissionState
+
+from test_admission_fused import (
+    _assert_same,
+    _mk_lanes,
+    _mk_state,
+    _scratch_fits,
+    _storm_env,
+)
+from test_cluster_packed import _nodes, _workload
+from test_faults import _workload as _timed_workload
+
+
+def _host_sim(**kw):
+    return ClusterSim(_nodes(), engine="fused", drain="host", **kw)
+
+
+def _dev_sim(**kw):
+    return ClusterSim(_nodes(), engine="fused", drain="device", **kw)
+
+
+# ------------------------------------------------------------- unit level
+class TestDrainUnit:
+    @pytest.mark.parametrize("select", ["first", "headroom"])
+    @pytest.mark.parametrize("use_dur", [True, False])
+    def test_fused_matches_numpy_host_drain(self, select, use_dur):
+        rng = np.random.default_rng(0)
+        out = {}
+        for backend in ("numpy", "fused"):
+            r = np.random.default_rng(7)
+            adm = _mk_state(backend, caps=(32.0, 48.0, 24.0),
+                            use_dur=use_dur)
+            lanes = _mk_lanes(adm, r, 14)
+            out[backend] = adm.drain(3.0, lanes, select=select)
+        assert out["fused"] == out["numpy"]
+        assert len(out["fused"]) > 0
+        del rng
+
+    def test_repeated_drains_and_cache_coherence(self):
+        """Drain, mutate residency, drain again — the device path must
+        keep agreeing with the host drain AND leave the shared fits
+        cache in a state the invalidation protocol can serve fresh."""
+        states = {}
+        for backend in ("numpy", "fused"):
+            rng = np.random.default_rng(11)
+            adm = _mk_state(backend, caps=(24.0, 40.0))
+            lanes = _mk_lanes(adm, rng, 16)
+            states[backend] = (adm, list(lanes))
+        placed0 = {}
+        for backend, (adm, lanes) in states.items():
+            placed0[backend] = adm.drain(0.0, lanes)
+        assert placed0["fused"] == placed0["numpy"]
+        done = {ji for ji, _ in placed0["fused"]}
+        rest = [ji for ji in states["fused"][1] if ji not in done]
+        for backend, (adm, _) in states.items():
+            # release one resident, advance time, drain the remainder
+            ji, ni = placed0[backend][0]
+            adm.release(ni, ji)
+            placed0[backend] = adm.drain(9.0, rest + [ji])
+        assert placed0["fused"] == placed0["numpy"]
+        adm, lanes = states["fused"]
+        np.testing.assert_array_equal(
+            adm.columns(9.0, lanes), _scratch_fits(adm, 9.0, lanes))
+
+    def test_one_dispatch_per_drain(self):
+        rng = np.random.default_rng(3)
+        adm = _mk_state("fused")
+        lanes = _mk_lanes(adm, rng, 12)
+        remaining = list(lanes)
+        for now in (0.0, 5.0, 50.0):
+            placed = adm.drain(now, remaining)
+            done = {ji for ji, _ in placed}
+            remaining = [ji for ji in remaining if ji not in done]
+        assert adm.stats["drains"] == 3
+        # Queues within DRAIN_CAP go straight into the program, whole:
+        # exactly ONE dispatch per drain, multi-placement or empty.
+        assert adm.stats["drain_dispatches"] == adm.stats["drains"]
+
+    def test_wide_queue_prefilter_caps_dispatch(self):
+        # Above DRAIN_CAP the drain pre-filters candidates through the
+        # cached columns and dispatches at most the cap; placements
+        # must still match the host oracle exactly.
+        rng = np.random.default_rng(9)
+        adm = _mk_state("fused")
+        ref = _mk_state("fused")
+        old_cap = type(adm).DRAIN_CAP
+        lanes = _mk_lanes(adm, rng, 48)
+        _mk_lanes(ref, np.random.default_rng(9), 48)
+        try:
+            type(adm).DRAIN_CAP = 16  # force the wide path on `adm`
+            got = adm.drain(0.0, lanes)
+        finally:
+            type(adm).DRAIN_CAP = old_cap
+        assert got == ref.drain(0.0, lanes)
+        assert got  # the scenario actually places
+
+    def test_select_validation(self):
+        adm = _mk_state("fused")
+        with pytest.raises(ValueError, match="select"):
+            adm.drain(0.0, [], select="best")
+
+    def test_shard_requires_fused_backend(self):
+        with pytest.raises(ValueError, match="shard"):
+            AdmissionState([32.0], K=2, G=8, backend="numpy", shard=2)
+
+    def test_shard_requires_devices(self):
+        import jax
+        n = jax.device_count()
+        with pytest.raises(ValueError, match="device"):
+            AdmissionState([32.0], K=2, G=8, backend="fused", shard=n + 1)
+
+
+# ----------------------------------------------------------- engine level
+class TestDeviceDrainDifferential:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_matches_host_drain(self, seed):
+        host = _host_sim().run(_workload(48, seed=seed), RetrySpec("ksplus"))
+        dev = _dev_sim().run(_workload(48, seed=seed), RetrySpec("ksplus"))
+        assert host.retries > 0
+        _assert_same(dev, host)
+
+    def test_retry_storm(self):
+        host = _host_sim().run(_workload(64, seed=11, under_frac=0.8),
+                               RetrySpec("ksplus"))
+        dev = _dev_sim().run(_workload(64, seed=11, under_frac=0.8),
+                             RetrySpec("ksplus"))
+        assert host.retries >= 20
+        _assert_same(dev, host)
+
+    def test_wastage_vs_legacy(self):
+        from repro.core import ksplus_retry
+        legacy = ClusterSim(_nodes(), engine="legacy").run(
+            _workload(40, seed=1), ksplus_retry)
+        dev = _dev_sim().run(_workload(40, seed=1), RetrySpec("ksplus"))
+        assert dev.placements == legacy.placements
+        np.testing.assert_allclose(dev.total_wastage_gbs,
+                                   legacy.total_wastage_gbs, rtol=1e-6)
+
+    def test_dag_replay(self):
+        from repro.workloads import assert_release_order, scenarios
+        wf = scenarios.get("workload_replay", n_tasks=300, seed=0)
+        host = _host_sim().run(wf.to_jobs(under_frac=0.2, seed=0),
+                               RetrySpec("ksplus"))
+        dev = _dev_sim().run(wf.to_jobs(under_frac=0.2, seed=0),
+                             RetrySpec("ksplus"))
+        _assert_same(dev, host)
+        assert_release_order(wf.to_jobs(seed=0), dev.placements)
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_node_churn(self, seed):
+        faults = FaultSchedule.node_churn(_nodes(), rate=0.04,
+                                          horizon=250.0, seed=seed)
+        jobs = lambda: _timed_workload(48, seed=seed, under_frac=0.4)
+        host = _host_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        dev = _dev_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        assert host.evictions > 0
+        _assert_same(dev, host)
+        assert dev.evictions == host.evictions
+        assert dev.starvation_s == host.starvation_s
+
+    def test_preemption_storm_join_mid_drain(self):
+        """A storm kills most nodes at t=30 (mass eviction → long queue),
+        then staggered rejoins land while that queue is still draining —
+        every join triggers a fresh device drain over the backlog."""
+        faults = FaultSchedule.preemption_storm(
+            _nodes(), t=30.0, frac=0.9, seed=2, down_time=35.0)
+        jobs = lambda: _timed_workload(56, seed=3, under_frac=0.5)
+        host = _host_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        dev = _dev_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        assert host.evictions > 0
+        _assert_same(dev, host)
+
+    def test_parking_and_starvation(self):
+        """Jobs bigger than every surviving node park (not spin) and
+        unpark on rejoin; the device path must reproduce the host's
+        starvation accounting exactly."""
+        def jobs():
+            out = _timed_workload(24, seed=4)
+            # Fits only the 64 GB node, arrives while that node is down
+            # -> parks until the t=120 rejoin.
+            big = np.full(40, 56.0)
+            out.append(Job(jid=900, family="t", input_gb=1.0, mem=big,
+                           dt=1.0,
+                           plan=AllocationPlan(np.zeros(1),
+                                               np.asarray([60.0])),
+                           est_runtime=40.0, release_time=30.0))
+            return out
+        faults = FaultSchedule([FaultEvent(20.0, "leave", 1),
+                                FaultEvent(120.0, "join", 1, 96.0)])
+        host = _host_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        dev = _dev_sim().run(jobs(), RetrySpec("ksplus"), faults=faults)
+        assert host.starvation_s > 0
+        _assert_same(dev, host)
+        assert dev.starvation_s == host.starvation_s
+
+    def test_offset_sweep(self):
+        cands = [OffsetCandidate(), OffsetCandidate(peak=0.25),
+                 OffsetCandidate(peak=0.5)]
+        host = _host_sim().run(_workload(32, seed=6), RetrySpec("ksplus"),
+                               offsets=cands)
+        dev = _dev_sim().run(_workload(32, seed=6), RetrySpec("ksplus"),
+                             offsets=cands)
+        for h, d in zip(host, dev):
+            _assert_same(d, h)
+
+    def test_drain_arg_validation(self):
+        with pytest.raises(ValueError, match="drain"):
+            ClusterSim(_nodes(), drain="gpu")
+        with pytest.raises(ValueError, match="shard"):
+            ClusterSim(_nodes(), drain="host", shard=2)
+
+
+# ---------------------------------------------------------- elastic level
+class TestElasticDeviceDrain:
+    def test_fused_drain_matches_numpy(self):
+        """Scripted submit/churn sequence: the fused planner (device
+        drain) and the numpy planner must make identical placement and
+        queueing decisions throughout."""
+        logs = {}
+        for backend in ("numpy", "fused"):
+            rng = np.random.default_rng(21)
+            pl = ElasticPlanner(backend=backend)
+            pl.node_join("n0", 48.0)
+            pl.node_join("n1", 32.0)
+            alive = ["n0", "n1"]
+            nxt, now, log = 2, 0.0, []
+            for step in range(50):
+                now += float(rng.uniform(0.0, 4.0))
+                op = rng.uniform()
+                if op < 0.5:
+                    jid = f"j{step}"
+                    log.append(("submit", jid, pl.submit(
+                        jid, _storm_env(rng, float(rng.uniform(6, 30))),
+                        now)))
+                elif op < 0.7:
+                    name = f"x{nxt}"
+                    nxt += 1
+                    alive.append(name)
+                    placed = pl.node_join(name,
+                                          float(rng.uniform(24, 64)),
+                                          now=now)
+                    log.append(("join", name, sorted(placed.items())))
+                elif op < 0.9 and len(alive) > 1:
+                    victim = alive.pop(int(rng.integers(0, len(alive))))
+                    log.append(("leave", victim,
+                                pl.node_leave(victim, now=now)))
+                else:
+                    log.append(("drain", None,
+                                sorted(pl.drain(now).items())))
+                log.append(("queued", None, pl.queued))
+            logs[backend] = log
+        assert logs["fused"] == logs["numpy"]
+
+    def test_duplicate_jid_falls_back(self):
+        """A queue holding the same jid twice takes the per-job admit
+        loop (second occurrence is a resident live re-size) — both
+        backends must agree on the outcome."""
+        outs = {}
+        for backend in ("numpy", "fused"):
+            pl = ElasticPlanner(backend=backend)
+            env = AllocationPlan(np.zeros(1), np.asarray([20.0]))
+            pl.pending.append(("dup", env))
+            pl.pending.append(("dup", env))
+            pl.node_join("n0", 32.0)
+            outs[backend] = (sorted(pl.drain(0.0).items()), pl.queued)
+        assert outs["fused"] == outs["numpy"]
+        assert outs["fused"][0] == [("dup", "n0")]
+
+
+# ---------------------------------------------------------- sharded level
+_SHARD_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert jax.device_count() >= 4, jax.device_count()
+import sys
+sys.path.insert(0, {tests_dir!r})
+from test_admission_fused import _mk_lanes, _mk_state
+from test_cluster_packed import _nodes, _workload
+from repro.core import RetrySpec
+from repro.sched import ClusterSim, Node
+from repro.sched.admission import AdmissionState
+
+# Unit: sharded drain == unsharded == numpy, both node-selection rules.
+for select in ("first", "headroom"):
+    out = {{}}
+    for shard in (None, 2, 4):
+        rng = np.random.default_rng(13)
+        adm = AdmissionState((32.0, 48.0, 24.0, 40.0, 28.0, 36.0), K=3,
+                             G=16, backend="fused", use_dur=True,
+                             shard=shard)
+        lanes = _mk_lanes(adm, rng, 18)
+        out[shard] = adm.drain(2.0, lanes, select=select)
+        assert adm.stats["drain_dispatches"] == 1, adm.stats
+    rng = np.random.default_rng(13)
+    ref = AdmissionState((32.0, 48.0, 24.0, 40.0, 28.0, 36.0), K=3,
+                         G=16, backend="numpy", use_dur=True)
+    lanes = _mk_lanes(ref, rng, 18)
+    out["numpy"] = ref.drain(2.0, lanes, select=select)
+    assert out[2] == out[None] == out["numpy"], (select, out)
+    assert out[4] == out[None], (select, out)
+    assert len(out[None]) > 0
+
+# Engine: sharded ClusterSim replay matches the unsharded device drain.
+plain = ClusterSim(_nodes() + [Node(3, 96.0)], engine="fused",
+                   drain="device").run(_workload(48, seed=2),
+                                       RetrySpec("ksplus"))
+shard = ClusterSim(_nodes() + [Node(3, 96.0)], engine="fused",
+                   drain="device", shard=2).run(_workload(48, seed=2),
+                                                RetrySpec("ksplus"))
+assert shard.placements == plain.placements
+assert shard.retries == plain.retries
+assert shard.makespan == plain.makespan
+print("SHARDED-DRAIN-OK")
+"""
+
+
+class TestShardedDrain:
+    def test_sharded_matches_unsharded(self):
+        tests_dir = os.path.dirname(os.path.abspath(__file__))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        src = os.path.join(os.path.dirname(tests_dir), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c",
+             _SHARD_CODE.format(tests_dir=tests_dir)],
+            capture_output=True, text=True, env=env, timeout=540)
+        assert out.returncode == 0, out.stderr[-4000:]
+        assert "SHARDED-DRAIN-OK" in out.stdout

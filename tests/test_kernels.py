@@ -183,3 +183,46 @@ class TestOOMProbeKernel:
         np.testing.assert_array_equal(viol, vr)
         np.testing.assert_allclose(w_succ, wsr, rtol=1e-4, atol=1e-2)
         np.testing.assert_allclose(w_kill, wkr, rtol=1e-4, atol=1e-2)
+
+    @pytest.mark.parametrize("dt", [0.5, 1.0, 2.5])
+    @pytest.mark.parametrize("block_t", [64, 512])
+    def test_dt_blocking_sweep(self, dt, block_t):
+        """dt scaling x grid blocking (T % block_t != 0 hits the pad
+        path) — the interpret-mode sweep the perf job used to run
+        bench-only; promoted to tier-1 so a kernel change cannot land
+        with a silently skewed probe."""
+        B, T, k = 12, 700, 4
+        starts = np.sort(RNG.uniform(0, T * 0.8 * dt, (B, k)), axis=1)
+        starts[:, 0] = 0
+        peaks = np.sort(RNG.uniform(1, 6, (B, k)), axis=1)
+        mems = np.abs(RNG.normal(3, 1.5, (B, T)))
+        lengths = RNG.integers(1, T, B)
+        viol, w_succ, w_kill = (np.asarray(x) for x in oom_probe(
+            starts, peaks, mems, lengths, dt=dt, block_t=block_t,
+            interpret=True))
+        vr, wsr, wkr = oom_probe_ref(
+            starts.astype(np.float32), peaks.astype(np.float32),
+            mems.astype(np.float32), lengths, dt)
+        np.testing.assert_array_equal(viol, vr)
+        np.testing.assert_allclose(w_succ, wsr, rtol=1e-4, atol=1e-2)
+        np.testing.assert_allclose(w_kill, wkr, rtol=1e-4, atol=1e-2)
+
+    def test_violation_edges(self):
+        """All-fit lanes report viol == -1 / w_kill == 0; a zero-capacity
+        plan violates at the very first valid sample."""
+        B, T, k = 6, 96, 3
+        starts = np.sort(RNG.uniform(0, 60, (B, k)), axis=1)
+        starts[:, 0] = 0
+        mems = np.abs(RNG.normal(2, 0.5, (B, T)))
+        lengths = RNG.integers(1, T, B)
+
+        fat = np.full((B, k), float(mems.max()) + 1.0)
+        viol, _, w_kill = (np.asarray(x) for x in oom_probe(
+            starts, fat, mems, lengths, dt=1.0, interpret=True))
+        np.testing.assert_array_equal(viol, np.full(B, -1, np.int32))
+        np.testing.assert_array_equal(w_kill, np.zeros(B))
+
+        zero = np.zeros((B, k))
+        viol, _, _ = (np.asarray(x) for x in oom_probe(
+            starts, zero, mems, lengths, dt=1.0, interpret=True))
+        np.testing.assert_array_equal(viol, np.zeros(B, np.int32))
