@@ -1,0 +1,74 @@
+"""Tier-1 floor gate over pytest's terminal summary.
+
+Extracted from the inline python in ``.github/workflows/ci.yml``: the
+tier-1 job tees pytest's output to a file and this gate decides whether
+the run clears the floor::
+
+    PYTHONPATH=src python -m pytest -q --tb=short | tee pytest.out
+    python -m benchmarks.ci_gate --floor 375 pytest.out
+
+The rules are deliberately simple and load-bearing:
+
+* any ``failed`` or ``error`` count > 0 fails, regardless of passes;
+* ``passed`` must meet the floor — the floor trips when a whole suite
+  silently stops being *collected* (a green run with 25 fewer tests is
+  a regression pytest's exit code cannot see);
+* a summary with no recognizable counts (empty file, crash before the
+  summary line) reads as 0 passed and therefore fails any floor > 0.
+
+The regexes intentionally match the historical inline gate:
+``(\\d+) passed`` / ``(\\d+) failed`` / ``(\\d+) error`` — the last one
+matches both "1 error" and "2 errors".
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+
+
+def parse_counts(text: str) -> dict:
+    """Extract pass/fail/error counts from pytest terminal output."""
+
+    def grab(pattern: str) -> int:
+        m = re.search(pattern, text)
+        return int(m.group(1)) if m else 0
+
+    return {
+        "passed": grab(r"(\d+) passed"),
+        "failed": grab(r"(\d+) failed"),
+        "errors": grab(r"(\d+) error"),
+    }
+
+
+def gate(text: str, floor: int) -> tuple[bool, str]:
+    """Apply the floor; returns (ok, human-readable verdict line)."""
+    c = parse_counts(text)
+    ok = c["failed"] == 0 and c["errors"] == 0 and c["passed"] >= floor
+    msg = (f"tier-1 gate: {c['passed']} passed, {c['failed']} failed, "
+           f"{c['errors']} errors (floor {floor}/0) -> "
+           f"{'OK' if ok else 'FAIL'}")
+    return ok, msg
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="pytest-output floor gate for the tier-1 CI job")
+    ap.add_argument("report",
+                    help="file holding pytest's output, or '-' for stdin")
+    ap.add_argument("--floor", type=int, required=True,
+                    help="minimum number of passed tests")
+    args = ap.parse_args(argv)
+    if args.report == "-":
+        text = sys.stdin.read()
+    else:
+        with open(args.report, encoding="utf-8", errors="replace") as f:
+            text = f.read()
+    ok, msg = gate(text, args.floor)
+    print(msg)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

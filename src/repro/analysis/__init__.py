@@ -1,0 +1,30 @@
+"""Static analysis + runtime contracts for the repro hot paths.
+
+Two halves:
+
+* :mod:`repro.analysis.lint` / :mod:`repro.analysis.rules` — the
+  AST-based, JAX-aware checker (``python -m repro.analysis src/`` or the
+  ``repro-lint`` entry point): use-after-donation, host-sync-in-hot-path,
+  x64-scope, tracer-unsafe-control-flow, recompile-hazard, gated by an
+  inline-allow + baseline ratchet.
+* :mod:`repro.analysis.contracts` — ``dispatch_budget`` /
+  ``record_dispatch``, the runtime assertions that pin one-program-per-
+  drain, bounded compiled-shape counts, and zero-rebuild churn.
+
+This package must stay import-light: ``contracts`` defers its jax
+import to first use so instrumented hot-path modules can import
+``record_dispatch`` without cycles or load-time cost.
+"""
+
+from .contracts import (DispatchBudgetError, dispatch_budget,
+                        record_dispatch)
+from .lint import Finding, LintConfig, run_lint
+
+__all__ = [
+    "DispatchBudgetError",
+    "dispatch_budget",
+    "record_dispatch",
+    "Finding",
+    "LintConfig",
+    "run_lint",
+]

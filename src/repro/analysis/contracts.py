@@ -1,0 +1,152 @@
+"""Runtime dispatch/compile contracts: ``dispatch_budget``.
+
+The static rules in :mod:`repro.analysis.rules` catch hazards in the
+source; this module pins the *observed* behaviour.  Two signals:
+
+* **compiles** — counted through jax's monitoring hooks: the
+  ``/jax/core/compile/backend_compile_duration`` event fires exactly
+  once per backend (XLA) compilation and never on a cache hit, so the
+  delta across a scope is the number of new compiled programs.
+* **dispatches** — jax has no cached-dispatch hook, so the repo's own
+  device-program call sites self-report through
+  :func:`record_dispatch` (``admission.drain``, ``admission.columns``,
+  ``admission.scatter``, ``admission.dev_sync``, ``cluster.first_attempt``,
+  ``fleet.probe``, ``fleet.retry``).  The counter is a plain dict
+  increment — nanoseconds against the ~ms dispatches it counts.
+
+Usage::
+
+    with dispatch_budget(compiles=0, forbid=("admission.dev_sync",)) as b:
+        sim.run()
+    # raises DispatchBudgetError on exit if the scope compiled anything
+    # or rebuilt device state; b.compiles / b.tag_counts stay readable.
+
+``jax.monitoring`` has no per-listener unregister, so one module-global
+listener is registered lazily on first use and feeds a counter for the
+life of the process.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from collections import Counter
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_compile_count = 0
+_listener_registered = False
+_dispatches: Counter = Counter()
+
+
+def _ensure_listener() -> None:
+    global _listener_registered
+    if _listener_registered:
+        return
+    from jax import monitoring
+
+    def _on_duration(event: str, duration: float, **kwargs) -> None:
+        global _compile_count
+        if event == _COMPILE_EVENT:
+            _compile_count += 1
+
+    monitoring.register_event_duration_secs_listener(_on_duration)
+    _listener_registered = True
+
+
+def record_dispatch(tag: str, n: int = 1) -> None:
+    """Self-report ``n`` device-program executions under ``tag``.
+
+    Called by the engine at every site that launches a compiled program
+    (or, for ``*.dev_sync`` tags, re-uploads device state wholesale).
+    Unconditional and cheap; budgets read the counter deltas.
+    """
+    _dispatches[tag] += n
+
+
+def compile_count() -> int:
+    """Backend compiles observed so far (listener registers on first use)."""
+    _ensure_listener()
+    return _compile_count
+
+
+def dispatch_counts() -> Counter:
+    """Copy of the global per-tag dispatch counter."""
+    return Counter(_dispatches)
+
+
+class DispatchBudgetError(AssertionError):
+    """A dispatch/compile contract was violated inside a budget scope."""
+
+
+class Budget:
+    """Live view of compile/dispatch activity since scope entry."""
+
+    def __init__(self, compiles, dispatches, tags, forbid):
+        self.max_compiles = compiles
+        self.max_dispatches = dispatches
+        self.tags = tuple(tags) if tags else None
+        self.forbid = tuple(forbid)
+        self._compiles0 = _compile_count
+        self._dispatches0 = Counter(_dispatches)
+
+    @property
+    def compiles(self) -> int:
+        return _compile_count - self._compiles0
+
+    @property
+    def tag_counts(self) -> Counter:
+        now = Counter(_dispatches)
+        now.subtract(self._dispatches0)
+        return +now
+
+    @property
+    def dispatches(self) -> int:
+        counts = self.tag_counts
+        if self.tags is not None:
+            return sum(counts[t] for t in self.tags)
+        return sum(counts.values())
+
+    def violations(self) -> list[str]:
+        out = []
+        if self.max_compiles is not None and self.compiles > self.max_compiles:
+            out.append(
+                f"compiled {self.compiles} new programs "
+                f"(budget {self.max_compiles})")
+        if (self.max_dispatches is not None
+                and self.dispatches > self.max_dispatches):
+            scope = f" across tags {list(self.tags)}" if self.tags else ""
+            out.append(
+                f"launched {self.dispatches} dispatches{scope} "
+                f"(budget {self.max_dispatches})")
+        counts = self.tag_counts
+        for tag in self.forbid:
+            if counts[tag]:
+                out.append(
+                    f"forbidden dispatch tag `{tag}` fired "
+                    f"{counts[tag]}x")
+        return out
+
+
+@contextlib.contextmanager
+def dispatch_budget(compiles: int | None = None,
+                    dispatches: int | None = None,
+                    tags=None,
+                    forbid=()):
+    """Assert compile/dispatch ceilings over a scope.
+
+    ``compiles``   — max NEW backend compilations allowed (None: untracked).
+    ``dispatches`` — max recorded dispatches, optionally restricted to
+                     ``tags`` (None: untracked).
+    ``forbid``     — dispatch tags that must not fire at all.
+
+    Raises :class:`DispatchBudgetError` on scope exit listing every
+    violated ceiling; yields a :class:`Budget` whose ``compiles`` /
+    ``dispatches`` / ``tag_counts`` stay readable after exit.
+    """
+    _ensure_listener()
+    budget = Budget(compiles, dispatches, tags, forbid)
+    yield budget
+    problems = budget.violations()
+    if problems:
+        raise DispatchBudgetError(
+            "dispatch budget violated: " + "; ".join(problems))

@@ -1,0 +1,358 @@
+"""AST fact extraction shared by the lint rules.
+
+The rules in :mod:`repro.analysis.rules` never walk raw trees; they
+query a :class:`ModuleModel` built here once per file.  The model knows
+the JAX-specific shapes this repo actually uses:
+
+* jitted defs — ``@jax.jit`` and
+  ``@functools.partial(jax.jit, donate_argnums=..., static_argnames=...)``
+  decorators, with the donate/static specs literal-evaluated;
+* kernel factories — module functions that *return* an inner jitted def
+  (the ``_fused_kernel(masked)`` / ``_KERNEL_CACHE`` pattern in
+  ``sched.admission``), so a call site like ``kernel = _drain_kernel(...)``
+  inherits the inner def's donation contract;
+* ``with enable_x64():`` spans, for the x64-scope rule;
+* per-function call edges (bare callee names), for hot-path
+  reachability;
+* inline ``# lint: allow[rule] reason`` suppressions.
+
+Everything is a plain syntactic fact; no imports of the analysed code
+are ever executed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+X64_NAMES = {"enable_x64"}
+
+_ALLOW_RE = re.compile(
+    r"#\s*lint:\s*allow\[([a-z0-9-]+)\]\s*(.*?)\s*$")
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def tail_name(node: ast.AST) -> str | None:
+    """Last component of a Name/Attribute chain (``c`` for ``a.b.c``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def iter_scope(node: ast.AST):
+    """Walk ``node`` without descending into nested function/class scopes.
+
+    The root's own body is entered even when the root is itself a
+    function; children that open a new scope (def/lambda/class) are
+    yielded but not entered.
+    """
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def _as_int_tuple(value) -> tuple[int, ...]:
+    if isinstance(value, int):
+        return (value,)
+    if isinstance(value, (tuple, list)):
+        return tuple(v for v in value if isinstance(v, int))
+    return ()
+
+
+def _as_str_tuple(value) -> tuple[str, ...]:
+    if isinstance(value, str):
+        return (value,)
+    if isinstance(value, (tuple, list)):
+        return tuple(v for v in value if isinstance(v, str))
+    return ()
+
+
+@dataclasses.dataclass
+class JitDef:
+    """A def compiled by ``jax.jit`` (directly or through ``partial``)."""
+
+    name: str
+    qualname: str
+    node: ast.FunctionDef
+    path: str
+    donate_argnums: tuple[int, ...] = ()
+    donate_argnames: tuple[str, ...] = ()
+    static_argnums: tuple[int, ...] = ()
+    static_argnames: tuple[str, ...] = ()
+    factory: str | None = None  # enclosing factory function, if any
+
+    @property
+    def params(self) -> list[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs + a.args]
+
+    @property
+    def kwonly_params(self) -> list[str]:
+        return [p.arg for p in self.node.args.kwonlyargs]
+
+    def annotation_of(self, pname: str) -> str | None:
+        a = self.node.args
+        for p in a.posonlyargs + a.args + a.kwonlyargs:
+            if p.arg == pname and p.annotation is not None:
+                return ast.unparse(p.annotation)
+        return None
+
+    def donated_params(self) -> set[str]:
+        out = set(self.donate_argnames)
+        params = self.params
+        for i in self.donate_argnums:
+            if 0 <= i < len(params):
+                out.add(params[i])
+        return out
+
+
+def jit_spec(call_or_dec: ast.AST) -> dict | None:
+    """Return the jit kwargs if the node is a jit expression, else None.
+
+    Handles ``jax.jit``, ``jax.jit(...)``,
+    ``functools.partial(jax.jit, ...)`` and ``jax.jit(fn, ...)``.
+    An empty dict means "jitted, default options".
+    """
+    if dotted_name(call_or_dec) in JIT_NAMES:
+        return {}
+    if not isinstance(call_or_dec, ast.Call):
+        return None
+    fname = dotted_name(call_or_dec.func)
+    if fname in JIT_NAMES:
+        return _literal_kwargs(call_or_dec)
+    if (fname in PARTIAL_NAMES and call_or_dec.args
+            and dotted_name(call_or_dec.args[0]) in JIT_NAMES):
+        return _literal_kwargs(call_or_dec)
+    return None
+
+
+def _literal_kwargs(call: ast.Call) -> dict:
+    out = {}
+    for kw in call.keywords:
+        if kw.arg is None:
+            continue
+        try:
+            out[kw.arg] = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            out[kw.arg] = None  # present but not a literal
+    return out
+
+
+def _make_jitdef(fnode, qualname, path, spec, factory=None) -> JitDef:
+    return JitDef(
+        name=fnode.name, qualname=qualname, node=fnode, path=path,
+        donate_argnums=_as_int_tuple(spec.get("donate_argnums")),
+        donate_argnames=_as_str_tuple(spec.get("donate_argnames")),
+        static_argnums=_as_int_tuple(spec.get("static_argnums")),
+        static_argnames=_as_str_tuple(spec.get("static_argnames")),
+        factory=factory)
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One def (module, method, or nested) plus its local facts."""
+
+    name: str
+    qualname: str
+    class_name: str | None
+    node: ast.FunctionDef
+    path: str
+    calls: set[str] = dataclasses.field(default_factory=set)
+    # Name/Attribute loads that are not calls — bound-method dispatch
+    # (``fn = self._run_fused; fn(...)``) shows up here, not in calls.
+    refs: set[str] = dataclasses.field(default_factory=set)
+    jit: JitDef | None = None
+
+    @property
+    def is_method(self) -> bool:
+        return self.class_name is not None
+
+
+@dataclasses.dataclass
+class ModuleModel:
+    """All syntactic facts the rules need for one source file."""
+
+    path: str
+    tree: ast.Module
+    source_lines: list[str]
+    functions: dict[str, FunctionInfo] = dataclasses.field(
+        default_factory=dict)
+    jit_defs: dict[str, JitDef] = dataclasses.field(default_factory=dict)
+    factories: dict[str, JitDef] = dataclasses.field(default_factory=dict)
+    x64_lines: set[int] = dataclasses.field(default_factory=set)
+    uses_enable_x64: bool = False
+    imports: set[str] = dataclasses.field(default_factory=set)
+    suppressions: dict[int, tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def uses_jax(self) -> bool:
+        return "jax" in self.imports
+
+    def function_of(self, qualtail: str) -> FunctionInfo | None:
+        """Look up by bare name or qualname suffix (first match)."""
+        if qualtail in self.functions:
+            return self.functions[qualtail]
+        for q, fi in self.functions.items():
+            if fi.name == qualtail:
+                return fi
+        return None
+
+
+def build_model(path: str, source: str) -> ModuleModel:
+    tree = ast.parse(source, filename=path)
+    model = ModuleModel(path=path, tree=tree,
+                        source_lines=source.splitlines())
+    _collect_imports(model)
+    _collect_functions(model)
+    _collect_x64_spans(model)
+    _collect_suppressions(model)
+    return model
+
+
+def _collect_imports(model: ModuleModel) -> None:
+    for node in ast.walk(model.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                model.imports.add(alias.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            model.imports.add(node.module.split(".")[0])
+
+
+def _collect_functions(model: ModuleModel) -> None:
+    def visit(node, qualstack: list[str], class_name: str | None):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                visit(child, qualstack + [child.name], child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qualname = ".".join(qualstack + [child.name])
+                info = FunctionInfo(
+                    name=child.name, qualname=qualname,
+                    class_name=class_name, node=child, path=model.path)
+                for sub in iter_scope(child):
+                    if isinstance(sub, ast.Call):
+                        callee = tail_name(sub.func)
+                        if callee:
+                            info.calls.add(callee)
+                    elif (isinstance(sub, (ast.Name, ast.Attribute))
+                          and isinstance(getattr(sub, "ctx", None),
+                                         ast.Load)):
+                        ref = tail_name(sub)
+                        if ref:
+                            info.refs.add(ref)
+                spec = _decorator_jit_spec(child)
+                if spec is not None:
+                    info.jit = _make_jitdef(
+                        child, qualname, model.path, spec)
+                    model.jit_defs[child.name] = info.jit
+                model.functions[qualname] = info
+                visit(child, qualstack + [child.name], None)
+            else:
+                visit(child, qualstack, class_name)
+
+    visit(model.tree, [], None)
+    _collect_factories(model)
+    _collect_jit_assignments(model)
+
+
+def _decorator_jit_spec(fnode) -> dict | None:
+    for dec in fnode.decorator_list:
+        spec = jit_spec(dec)
+        if spec is not None:
+            return spec
+    return None
+
+
+def _collect_factories(model: ModuleModel) -> None:
+    """A function returning one of its own jitted inner defs is a factory."""
+    for qualname, info in model.functions.items():
+        inner = {
+            fi.name: fi.jit for q, fi in model.functions.items()
+            if fi.jit is not None and q.startswith(qualname + ".")}
+        if not inner:
+            continue
+        for node in iter_scope(info.node):
+            if (isinstance(node, ast.Return)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in inner):
+                jd = inner[node.value.id]
+                jd.factory = info.name
+                model.factories[info.name] = jd
+
+
+def _collect_jit_assignments(model: ModuleModel) -> None:
+    """``fn = jax.jit(helper, donate_argnums=...)`` at any scope."""
+    for node in ast.walk(model.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        spec = jit_spec(node.value)
+        if spec is None:
+            continue
+        name = node.targets[0].id
+        # Prefer the wrapped def's signature when it is a local def.
+        wrapped = None
+        args = node.value.args
+        base = args[1] if (dotted_name(node.value.func) in PARTIAL_NAMES
+                           and len(args) > 1) else (
+            args[0] if args else None)
+        if base is not None and isinstance(base, ast.Name):
+            fi = model.function_of(base.id)
+            if fi is not None:
+                wrapped = fi.node
+        target = wrapped if wrapped is not None else ast.FunctionDef(
+            name=name, args=ast.arguments(
+                posonlyargs=[], args=[], kwonlyargs=[], kw_defaults=[],
+                defaults=[]),
+            body=[], decorator_list=[], lineno=node.lineno,
+            col_offset=node.col_offset)
+        model.jit_defs[name] = _make_jitdef(
+            target, name, model.path, spec)
+
+
+def _collect_x64_spans(model: ModuleModel) -> None:
+    for node in ast.walk(model.tree):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        for item in node.items:
+            expr = item.context_expr
+            callee = expr.func if isinstance(expr, ast.Call) else expr
+            if tail_name(callee) in X64_NAMES:
+                model.uses_enable_x64 = True
+                model.x64_lines.update(
+                    range(node.lineno, (node.end_lineno or node.lineno) + 1))
+                break
+
+
+def _collect_suppressions(model: ModuleModel) -> None:
+    """``# lint: allow[rule] reason`` — same line, or a standalone
+    comment line applying to the next line."""
+    for i, line in enumerate(model.source_lines, start=1):
+        m = _ALLOW_RE.search(line)
+        if not m:
+            continue
+        rule, reason = m.group(1), m.group(2)
+        target = i
+        if line.lstrip().startswith("#"):
+            target = i + 1
+        model.suppressions[target] = (rule, reason)

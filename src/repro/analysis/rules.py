@@ -1,0 +1,506 @@
+"""The JAX-aware rules.
+
+Each rule is a function over a :class:`~repro.analysis.lint.LintContext`
+registered with :func:`~repro.analysis.lint.rule`; it yields
+:class:`~repro.analysis.lint.Finding` objects.  Rules are deliberately
+syntactic — they know the repo's idioms (kernel factories, ``_KERNEL_CACHE``,
+``pad_lane_axis`` bucketing, ``enable_x64`` scoping) and trade exhaustive
+soundness for a low false-positive rate on exactly those idioms.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .lint import Finding, LintContext, rule
+from .model import (FunctionInfo, JitDef, ModuleModel, dotted_name,
+                    iter_scope, tail_name)
+
+# Host-conversion callables: their result is a host value (rule 2 decides
+# whether the *conversion itself* is a problem; rule 4 treats the result
+# as safe to branch on).
+_HOST_CONVERTERS = {"int", "float", "bool", "len"}
+_NP_SYNC = {"np.asarray", "numpy.asarray", "np.array", "numpy.array"}
+_EXPLICIT_SYNC = {"jax.device_get", "device_get"}
+# Shape-bucketing helpers: a len()/shape value routed through one of
+# these no longer recompiles per distinct size.
+_BUCKETERS = {"_bucket", "_pow4", "pad_lane_axis", "group_lengths",
+              "bit_length", "next_power_of_two"}
+_RAW_ALLOC = {"np.zeros", "np.empty", "np.full", "np.ones",
+              "jnp.zeros", "jnp.empty", "jnp.full", "jnp.ones",
+              "numpy.zeros", "numpy.empty", "numpy.full", "numpy.ones"}
+
+
+def _pos(node) -> tuple[int, int]:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+def _end_pos(node) -> tuple[int, int]:
+    return (getattr(node, "end_lineno", getattr(node, "lineno", 0)),
+            getattr(node, "end_col_offset", 0))
+
+
+def _scope_sorted(fnode):
+    return sorted(iter_scope(fnode), key=_pos)
+
+
+def _jit_tables(ctx: LintContext):
+    """(top-level jitted defs by bare name, factory name -> inner JitDef)."""
+    jits: dict[str, JitDef] = {}
+    factories: dict[str, JitDef] = {}
+    for m in ctx.models:
+        for fi in m.functions.values():
+            if fi.jit is not None and "." not in fi.qualname:
+                jits[fi.name] = fi.jit
+        factories.update(m.factories)
+        # `fn = jax.jit(...)` assignments are top-level callables too.
+        for name, jd in m.jit_defs.items():
+            if name not in jits and jd.factory is None and all(
+                    f.name != name or f.jit is not jd
+                    for f in m.functions.values()):
+                jits[name] = jd
+    return jits, factories
+
+
+def _local_jit_map(fi: FunctionInfo, factories: dict) -> dict[str, JitDef]:
+    """Names bound in this function from kernel-factory calls.
+
+    Handles ``kernel = _drain_kernel(...)`` and the ternary form
+    ``kernel = (_a(...) if cond else _b(...))``.
+    """
+    out: dict[str, JitDef] = {}
+    for node in iter_scope(fi.node):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        val = node.value
+        cands = [val.body, val.orelse] if isinstance(val, ast.IfExp) else [val]
+        for c in cands:
+            if isinstance(c, ast.Call):
+                t = tail_name(c.func)
+                if t in factories:
+                    out[node.targets[0].id] = factories[t]
+                    break
+    return out
+
+
+def _resolve_callee(call: ast.Call, local: dict, jits: dict
+                    ) -> JitDef | None:
+    t = tail_name(call.func)
+    if t in local:
+        return local[t]
+    return jits.get(t)
+
+
+def _store_names(target: ast.AST) -> set[str]:
+    out = set()
+    for node in ast.walk(target):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            d = dotted_name(node)
+            if d:
+                out.add(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 1: use-after-donation
+
+
+@rule("use-after-donation")
+def use_after_donation(ctx: LintContext):
+    """A buffer passed to a ``donate_argnums``/``donate_argnames`` call
+    site is read again before being rebound.  Donated device buffers are
+    invalidated by the call; any later read sees deleted memory."""
+    jits, factories = _jit_tables(ctx)
+    for m in ctx.models:
+        for fi in m.functions.values():
+            local = _local_jit_map(fi, factories)
+            nodes = _scope_sorted(fi.node)
+            stmts = [n for n in nodes if isinstance(n, ast.stmt)]
+            for call in nodes:
+                if not isinstance(call, ast.Call):
+                    continue
+                jd = _resolve_callee(call, local, jits)
+                if jd is None or not jd.donated_params():
+                    continue
+                for expr in _donated_actuals(call, jd):
+                    d = dotted_name(expr)
+                    if d is None:
+                        continue
+                    yield from _check_read_after(
+                        m, fi, call, d, nodes, stmts)
+
+
+def _donated_actuals(call: ast.Call, jd: JitDef):
+    params = jd.params
+    for i in jd.donate_argnums:
+        if i < len(call.args):
+            yield call.args[i]
+    for kw in call.keywords:
+        if kw.arg is None:
+            continue
+        if kw.arg in jd.donate_argnames:
+            yield kw.value
+        elif kw.arg in params and params.index(kw.arg) in jd.donate_argnums:
+            yield kw.value
+    for name in jd.donate_argnames:
+        if name in params and params.index(name) < len(call.args):
+            yield call.args[params.index(name)]
+
+
+def _enclosing_stmt(call, stmts):
+    best = None
+    for s in stmts:
+        if (_pos(s) <= _pos(call) and _end_pos(s) >= _end_pos(call)
+                and (best is None or _pos(s) >= _pos(best))):
+            best = s
+    return best
+
+
+def _check_read_after(m: ModuleModel, fi: FunctionInfo, call: ast.Call,
+                      donated: str, nodes, stmts):
+    encl = _enclosing_stmt(call, stmts)
+    if encl is not None and isinstance(
+            encl, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        targets = (encl.targets if isinstance(encl, ast.Assign)
+                   else [encl.target])
+        for t in targets:
+            if donated in _store_names(t):
+                return  # rebound by the very statement that donates
+    boundary = _end_pos(encl if encl is not None else call)
+    for node in nodes:
+        if _pos(node) <= boundary:
+            continue
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            if dotted_name(node) != donated:
+                continue
+            if isinstance(node.ctx, ast.Store):
+                return  # rebound before any read
+            if isinstance(node.ctx, ast.Load):
+                yield Finding(
+                    rule="use-after-donation", path=m.path,
+                    line=node.lineno,
+                    message=f"`{donated}` was donated to "
+                            f"`{tail_name(call.func)}` on line "
+                            f"{call.lineno} and is read here before "
+                            f"being rebound")
+                return
+
+
+# ---------------------------------------------------------------------------
+# rule 2: host-sync-in-hot-path
+
+
+@rule("host-sync-in-hot-path")
+def host_sync_in_hot_path(ctx: LintContext):
+    """``.item()``, ``float()``/``int()`` on device values,
+    ``np.asarray``/``jax.device_get`` on jit results, or
+    ``block_until_ready`` reachable from the event-loop entry points
+    (``ClusterSim.run``, ``AdmissionState.drain``, fleet replay).  Each
+    one stalls the dispatch pipeline for a device→host round trip."""
+    jits, factories = _jit_tables(ctx)
+    reachable = _reachable_functions(ctx)
+    cfg = ctx.config
+    for m in ctx.models:
+        if any(frag in m.path for frag in cfg.allow_paths):
+            continue
+        for fi in m.functions.values():
+            if fi.name not in reachable:
+                continue
+            if any(fi.name.startswith(p) for p in cfg.allow_funcs):
+                continue
+            local = _local_jit_map(fi, factories)
+            tainted = _device_tainted(fi, local, jits)
+            yield from _scan_syncs(m, fi, tainted, local, jits)
+
+
+def _reachable_functions(ctx: LintContext) -> set[str]:
+    """Bare function names reachable from the configured entry points."""
+    graph: dict[str, set[str]] = {}
+    roots: set[str] = set()
+    known = {fi.name for m in ctx.models for fi in m.functions.values()}
+    for m in ctx.models:
+        for fi in m.functions.values():
+            # calls, plus bound-method references to known functions
+            # (``engine = self._run_fused; engine(...)``)
+            graph.setdefault(fi.name, set()).update(
+                fi.calls | (fi.refs & known))
+            for klass, fname in ctx.config.entry_points:
+                if fi.name == fname and (klass is None
+                                         or fi.class_name == klass):
+                    roots.add(fi.name)
+    seen = set(roots)
+    frontier = list(roots)
+    for _ in range(ctx.config.max_call_depth):
+        nxt = []
+        for name in frontier:
+            for callee in graph.get(name, ()):
+                if callee in graph and callee not in seen:
+                    seen.add(callee)
+                    nxt.append(callee)
+        if not nxt:
+            break
+        frontier = nxt
+    return seen
+
+
+def _device_tainted(fi: FunctionInfo, local: dict, jits: dict) -> set[str]:
+    """Names holding values produced by jitted callables in this scope."""
+    tainted: set[str] = set()
+    for node in iter_scope(fi.node):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not (isinstance(node.value, ast.Call)
+                and _resolve_callee(node.value, local, jits) is not None):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                tainted.add(t.id)
+            elif isinstance(t, ast.Tuple):
+                tainted.update(e.id for e in t.elts
+                               if isinstance(e, ast.Name))
+            elif isinstance(t, ast.Subscript) and isinstance(
+                    t.value, ast.Name):
+                tainted.add(t.value.id)
+    return tainted
+
+
+def _is_tainted_expr(expr, tainted, local, jits) -> bool:
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    if isinstance(expr, ast.Subscript):
+        return _is_tainted_expr(expr.value, tainted, local, jits)
+    if isinstance(expr, ast.Call):
+        return _resolve_callee(expr, local, jits) is not None
+    return False
+
+
+def _scan_syncs(m, fi, tainted, local, jits):
+    for node in iter_scope(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        t = tail_name(node.func)
+        dn = dotted_name(node.func)
+        if t == "item" and not node.args:
+            yield Finding(
+                rule="host-sync-in-hot-path", path=m.path, line=node.lineno,
+                message="`.item()` forces a device->host sync inside the "
+                        "event loop")
+        elif t == "block_until_ready":
+            yield Finding(
+                rule="host-sync-in-hot-path", path=m.path, line=node.lineno,
+                message="`block_until_ready()` stalls the dispatch "
+                        "pipeline in the hot path")
+        elif dn in _EXPLICIT_SYNC:
+            yield Finding(
+                rule="host-sync-in-hot-path", path=m.path, line=node.lineno,
+                message="`jax.device_get` is a device->host transfer in "
+                        "the hot path")
+        elif dn in _NP_SYNC and node.args and _is_tainted_expr(
+                node.args[0], tainted, local, jits):
+            yield Finding(
+                rule="host-sync-in-hot-path", path=m.path, line=node.lineno,
+                message=f"`{dn}` on a jit result blocks on the device "
+                        f"in the hot path")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id in ("float", "int") and len(node.args) == 1
+              and _is_tainted_expr(node.args[0], tainted, local, jits)):
+            yield Finding(
+                rule="host-sync-in-hot-path", path=m.path, line=node.lineno,
+                message=f"`{node.func.id}()` on a jit result forces a "
+                        f"device->host sync in the hot path")
+
+
+# ---------------------------------------------------------------------------
+# rule 3: x64-scope discipline
+
+
+@rule("x64-scope")
+def x64_scope(ctx: LintContext):
+    """float64 dtypes or device literals constructed outside a
+    ``with enable_x64():`` scope in jax-importing code.  Outside the
+    scope jax silently truncates to float32, which breaks the
+    float64-on-device precision contract bitwise."""
+    for m in ctx.models:
+        if not m.uses_jax:
+            continue
+        guarded = _x64_guarded_lines(m)
+        for node in ast.walk(m.tree):
+            line = getattr(node, "lineno", None)
+            if line is None or line in m.x64_lines or line in guarded:
+                continue
+            dn = dotted_name(node) if isinstance(
+                node, (ast.Name, ast.Attribute)) else None
+            if dn in ("jnp.float64", "jax.numpy.float64"):
+                yield Finding(
+                    rule="x64-scope", path=m.path, line=line,
+                    message="`jnp.float64` outside an `enable_x64()` "
+                            "scope silently becomes float32")
+            elif isinstance(node, ast.Call):
+                fdn = dotted_name(node.func) or ""
+                if not (fdn.startswith("jnp.")
+                        or fdn.startswith("jax.numpy.")):
+                    continue
+                for kw in node.keywords:
+                    if (kw.arg == "dtype"
+                            and isinstance(kw.value, ast.Constant)
+                            and kw.value.value == "float64"):
+                        yield Finding(
+                            rule="x64-scope", path=m.path, line=line,
+                            message="dtype='float64' passed to a jnp "
+                                    "constructor outside `enable_x64()`")
+
+
+def _x64_guarded_lines(m: ModuleModel) -> set[int]:
+    """Lines inside an explicit `jax_enable_x64`/x64 runtime guard."""
+    guarded: set[int] = set()
+    for node in ast.walk(m.tree):
+        if isinstance(node, (ast.If, ast.IfExp)):
+            test_names = {dotted_name(n) or "" for n in ast.walk(node.test)
+                          if isinstance(n, (ast.Name, ast.Attribute))}
+            if any("x64" in t for t in test_names):
+                guarded.update(range(
+                    node.lineno, (node.end_lineno or node.lineno) + 1))
+    return guarded
+
+
+# ---------------------------------------------------------------------------
+# rule 4: tracer-unsafe control flow
+
+
+@rule("tracer-unsafe-control-flow")
+def tracer_unsafe_control_flow(ctx: LintContext):
+    """Python ``if``/``while`` directly on a value returned by a jitted
+    callable.  Under trace this raises ConcretizationTypeError; outside
+    it is a hidden device sync.  Convert explicitly (``int()``/``bool``)
+    or use ``lax.cond``/``jnp.where``."""
+    jits, factories = _jit_tables(ctx)
+    for m in ctx.models:
+        for fi in m.functions.values():
+            local = _local_jit_map(fi, factories)
+            tainted = _device_tainted(fi, local, jits)
+            if not tainted:
+                continue
+            for node in iter_scope(fi.node):
+                if not isinstance(node, (ast.If, ast.While)):
+                    continue
+                name = _bare_tainted_in_test(node.test, tainted)
+                if name:
+                    kw = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        rule="tracer-unsafe-control-flow", path=m.path,
+                        line=node.lineno,
+                        message=f"Python `{kw}` branches on `{name}`, a "
+                                f"jit result — tracer-unsafe and a "
+                                f"hidden sync")
+
+
+def _bare_tainted_in_test(test, tainted) -> str | None:
+    """First tainted Name in the test not wrapped in a host converter."""
+    stack = [test]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Call):
+            t = tail_name(node.func)
+            if t in _HOST_CONVERTERS or t in ("asarray", "array",
+                                              "device_get"):
+                continue  # explicit conversion: rule 2's territory
+        if isinstance(node, ast.Name) and node.id in tainted:
+            return node.id
+        stack.extend(ast.iter_child_nodes(node))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# rule 5: recompile hazards
+
+
+@rule("recompile-hazard")
+def recompile_hazard(ctx: LintContext):
+    """Jit signatures or call sites that recompile per event: float or
+    unhashable static args, and operands shaped by a raw ``len()`` that
+    skipped the pow2/pow4 bucketing helpers."""
+    jits, factories = _jit_tables(ctx)
+    for m in ctx.models:
+        for fi in m.functions.values():
+            if fi.jit is not None:
+                yield from _static_arg_hazards(m, fi.jit)
+            yield from _raw_shape_hazards(m, fi, factories, jits)
+
+
+def _static_arg_hazards(m: ModuleModel, jd: JitDef):
+    static = set(jd.static_argnames)
+    params = jd.params
+    for i in jd.static_argnums:
+        if i < len(params):
+            static.add(params[i])
+    for pname in sorted(static):
+        ann = jd.annotation_of(pname) or ""
+        if "float" in ann:
+            yield Finding(
+                rule="recompile-hazard", path=m.path, line=jd.node.lineno,
+                message=f"static arg `{pname}: {ann}` of `{jd.name}` "
+                        f"recompiles per distinct float value")
+        elif any(u in ann for u in ("list", "dict", "set", "ndarray")):
+            yield Finding(
+                rule="recompile-hazard", path=m.path, line=jd.node.lineno,
+                message=f"static arg `{pname}: {ann}` of `{jd.name}` is "
+                        f"unhashable — jit will reject or retrace it")
+
+
+def _raw_shape_hazards(m: ModuleModel, fi: FunctionInfo, factories, jits):
+    local = _local_jit_map(fi, factories)
+    # Pass 1: names allocated with a len()-derived, unbucketed shape.
+    raw: dict[str, int] = {}
+    for node in iter_scope(fi.node):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            continue
+        val = node.value
+        if isinstance(val, ast.Call):
+            dn = dotted_name(val.func)
+            if dn in _RAW_ALLOC and _has_raw_len(val):
+                raw[node.targets[0].id] = node.lineno
+            # one aliasing hop: y = jnp.asarray(x) keeps x's shape
+            elif (dn in _NP_SYNC or tail_name(val.func) == "asarray") \
+                    and val.args and isinstance(val.args[0], ast.Name) \
+                    and val.args[0].id in raw:
+                raw[node.targets[0].id] = raw[val.args[0].id]
+    if not raw:
+        return
+    # Pass 2: does a raw-shaped name feed a jitted call?
+    for node in iter_scope(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        jd = _resolve_callee(node, local, jits)
+        if jd is None:
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            # unwrap an inline device upload: kernel(jnp.asarray(run_idx))
+            if (isinstance(arg, ast.Call) and tail_name(arg.func) == "asarray"
+                    and arg.args and isinstance(arg.args[0], ast.Name)):
+                arg = arg.args[0]
+            if isinstance(arg, ast.Name) and arg.id in raw:
+                yield Finding(
+                    rule="recompile-hazard", path=m.path, line=node.lineno,
+                    message=f"`{arg.id}` (allocated with a raw len() "
+                            f"shape on line {raw[arg.id]}) feeds jitted "
+                            f"`{tail_name(node.func)}` — recompiles per "
+                            f"distinct size; route through a bucketing "
+                            f"helper")
+
+
+def _has_raw_len(alloc_call: ast.Call) -> bool:
+    """A len() call in the shape args not wrapped by a bucketing helper."""
+    stack = [a for a in alloc_call.args] + [
+        kw.value for kw in alloc_call.keywords if kw.arg != "dtype"]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Call):
+            t = tail_name(node.func)
+            if t in _BUCKETERS:
+                continue
+            if t == "len":
+                return True
+        stack.extend(ast.iter_child_nodes(node))
+    return False

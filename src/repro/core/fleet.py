@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import record_dispatch
 from repro.core import envelope as _env
 from repro.core.allocation import AllocationPlan
 from repro.core.envelope import PackedEnvelopes, RetrySpec
@@ -747,6 +748,7 @@ def simulate_fleet_many(
             groups.append(
                 (bs, bp, bucket.dmems, bucket.dmemsneg, bucket.dlengths,
                  bucket.dsummem))
+    record_dispatch("fleet.probe")
     probes = _probe_many(tuple(groups), mm, dt=float(dt), backend=backend)
 
     results = [
@@ -763,8 +765,10 @@ def simulate_fleet_many(
         starts, peaks, nseg = packed_jobs[j]
         for bucket in batch.buckets:
             b = len(bucket.idx)
-            viol = np.asarray(probes[gi][0])[:b]
-            w_succ = np.asarray(probes[gi][1], np.float64)[:b]
+            # lint: allow[host-sync-in-hot-path] one batched readback per bucket group; failures must be compacted on host for phase B
+            viol, w_succ = jax.device_get(probes[gi])
+            viol = viol[:b]
+            w_succ = w_succ[:b].astype(np.float64)
             ok = viol < 0
             res = results[j]
             res.wastage_gbs[bucket.idx[ok]] = w_succ[ok]
@@ -785,14 +789,17 @@ def simulate_fleet_many(
             gi += 1
 
     if fail_groups:
+        record_dispatch("fleet.retry")
         outs = _retry_many(
             tuple(fail_groups), mm, specs=tuple(fail_specs),
             dt=float(dt), max_attempts=max_attempts, backend=backend)
-        for (j, out_idx, nf), (w, att, suc) in zip(fail_meta, outs):
+        for (j, out_idx, nf), out in zip(fail_meta, outs):
             res = results[j]
-            res.wastage_gbs[out_idx] = np.asarray(w, np.float64)[:nf]
-            res.attempts[out_idx] = np.asarray(att)[:nf]
-            res.succeeded[out_idx] = np.asarray(suc)[:nf]
+            # lint: allow[host-sync-in-hot-path] one batched readback per fail group scatters the retry outcomes
+            w, att, suc = jax.device_get(out)
+            res.wastage_gbs[out_idx] = w[:nf].astype(np.float64)
+            res.attempts[out_idx] = att[:nf]
+            res.succeeded[out_idx] = suc[:nf]
     return results
 
 

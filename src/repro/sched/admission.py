@@ -76,6 +76,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.analysis.contracts import record_dispatch
 from repro.core.envelope import fits_column
 
 __all__ = ["AdmissionState"]
@@ -672,8 +673,15 @@ class AdmissionState:
     # ------------------------------------------------------------ fused path
     def _dev_sync(self):
         """(Re)upload the packed lane state to the device (bulk path; the
-        incremental paths go through donated scatters)."""
+        incremental paths go through donated scatters).
+
+        Contract: after the initial upload this must never fire again on
+        node join/leave — churn only changes the *operands* of the next
+        dispatch, never the device-resident lane state
+        (``tests/test_contracts.py`` pins the tag at one per replay).
+        """
         import jax.numpy as jnp
+        record_dispatch("admission.dev_sync")
         self._dstarts = jnp.asarray(self.starts)
         self._dpeaks = jnp.asarray(self.peaks)
         self._dneed = jnp.asarray(self.need)
@@ -693,6 +701,7 @@ class AdmissionState:
             return
         from jax.experimental import enable_x64
         scatter = _scatter_rows_fn()
+        record_dispatch("admission.scatter", 3)
         with enable_x64():
             import jax.numpy as jnp
             rows = jnp.asarray(np.asarray(lanes, np.int32))
@@ -708,6 +717,7 @@ class AdmissionState:
             return
         from jax.experimental import enable_x64
         scatter = _scatter_rows_fn()
+        record_dispatch("admission.scatter")
         with enable_x64():
             import jax.numpy as jnp
             self._dadmit = scatter(
@@ -722,6 +732,7 @@ class AdmissionState:
         that is a single node over the previously-True lanes, not the
         whole matrix.
         """
+        import jax
         from jax.experimental import enable_x64
         import jax.numpy as jnp
 
@@ -745,17 +756,21 @@ class AdmissionState:
         (q_idx,) = pad_lane_axis(
             (np.asarray(lanes, np.int32),), (0,), lo=8, fine=True, sub=sub)
         nq = len(lanes)
+        record_dispatch("admission.columns")
         with enable_x64():
             if self._dirty_dev:
                 self._dev_sync()
+            # lint: allow[recompile-hazard] stale-row refreshes are execution-bound by design (see comment above): rows stay exact, only the run axis is padded
             fits, minresid = kernel(
                 self._dstarts, self._dpeaks, self._dadmit, self._ddur,
                 self._dneed, self._dgrid,
                 jnp.asarray(self.caps[nodes]), jnp.asarray(run_idx),
                 jnp.asarray(run_valid), jnp.asarray(q_idx),
                 jnp.float64(self._now), jnp.float64(self.tol))
-        self.fits[np.ix_(nodes, lanes)] = np.asarray(fits)[:, :nq]
-        self.minresid[np.ix_(nodes, lanes)] = np.asarray(minresid)[:, :nq]
+        # lint: allow[host-sync-in-hot-path] one batched readback materializes the host fits cache the drain pre-filter reads
+        fits_h, minresid_h = jax.device_get((fits, minresid))
+        self.fits[np.ix_(nodes, lanes)] = fits_h[:, :nq]
+        self.minresid[np.ix_(nodes, lanes)] = minresid_h[:, :nq]
 
     # ------------------------------------------------------------------ drain
     def drain(self, now: float, lanes: Sequence[int],
@@ -883,6 +898,7 @@ class AdmissionState:
         invalidated afterwards (monotonic rule) so the next refresh
         recomputes exactly what a placement can have changed.
         """
+        import jax
         from jax.experimental import enable_x64
         import jax.numpy as jnp
 
@@ -921,9 +937,15 @@ class AdmissionState:
                 jnp.float64(now), jnp.float64(self.tol))
             self._dadmit = admit_new
         self.stats["drain_dispatches"] += 1
-        n = int(count)
-        out_lane = np.asarray(out_lane)[:n]
-        out_node = np.asarray(out_node)[:n]
+        record_dispatch("admission.drain")
+        # The drain's placement decisions must reach the host loop below,
+        # so one transfer is irreducible — but it is ONE: fetching the
+        # three outputs together replaces the previous int(count) +
+        # 2x np.asarray round trips with a single batched device_get.
+        # lint: allow[host-sync-in-hot-path] single batched readback per drain; decisions feed host bookkeeping
+        out_lane, out_node, n = jax.device_get((out_lane, out_node, count))
+        out_lane = out_lane[:n]
+        out_node = out_node[:n]
         placed: List[tuple] = []
         for lane, ni in zip(out_lane.tolist(), out_node.tolist()):
             # Host bookkeeping per placement; the device-side admit_t

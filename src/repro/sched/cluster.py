@@ -109,6 +109,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.contracts import record_dispatch
 from repro.core import AllocationPlan, alloc_at, first_violation
 from repro.core.envelope import (
     PAD_START,
@@ -778,10 +779,12 @@ class ClusterSim:
 
         viol = np.empty((B,), np.int64)
         for dtv, idxs, dmems, dlengths in groups:
+            record_dispatch("cluster.first_attempt")
             v, _ = first_attempt(
                 jnp.asarray(starts[idxs].astype(np.float32)),
                 jnp.asarray(peaks[idxs].astype(np.float32)),
                 dmems, dlengths, jnp.float32(np.inf), dt=dtv)
+            # lint: allow[host-sync-in-hot-path] one batched readback per dt group seeds the host event queue at replay setup
             viol[idxs] = np.asarray(v, np.int64)
         return viol
 

@@ -1,0 +1,116 @@
+"""The bench-regression guard (``benchmarks/check_regression.py``).
+
+Synthetic baseline/current BENCH pairs over every gated key family:
+``*_speedup_x`` (higher-better), ``*_overhead_x`` /
+``*_dispatches_per_drain`` (lower-better), and the boolean correctness
+suffixes (``*_match`` / ``*_ok`` / ``*_bitwise``).
+"""
+
+import json
+
+import pytest
+
+from benchmarks.check_regression import _load, compare, main
+
+
+def _kv(**kw):
+    """baseline/fresh dicts in the loader's key -> (src, value) shape."""
+    return {k: ("BENCH_t.json", v) for k, v in kw.items()}
+
+
+class TestCompare:
+    def test_speedup_drop_beyond_tolerance_fails(self):
+        failures, _ = compare(_kv(drain_speedup_x=10.0),
+                              _kv(drain_speedup_x=7.9), tolerance=0.2)
+        assert len(failures) == 1 and "drain_speedup_x" in failures[0]
+
+    def test_speedup_drop_within_tolerance_passes(self):
+        failures, _ = compare(_kv(drain_speedup_x=10.0),
+                              _kv(drain_speedup_x=8.1), tolerance=0.2)
+        assert failures == []
+
+    def test_speedup_improvement_passes(self):
+        failures, _ = compare(_kv(drain_speedup_x=10.0),
+                              _kv(drain_speedup_x=30.0), tolerance=0.2)
+        assert failures == []
+
+    def test_overhead_rise_beyond_tolerance_fails(self):
+        failures, _ = compare(_kv(sync_overhead_x=1.0),
+                              _kv(sync_overhead_x=1.3), tolerance=0.2)
+        assert len(failures) == 1 and "ceiling" in failures[0]
+
+    def test_dispatches_per_drain_is_lower_better(self):
+        failures, _ = compare(_kv(drain_dispatches_per_drain=1.0),
+                              _kv(drain_dispatches_per_drain=2.0),
+                              tolerance=0.2)
+        assert len(failures) == 1
+
+    def test_bool_gate_flip_fails_tolerance_free(self):
+        for suffix in ("_match", "_ok", "_bitwise"):
+            failures, _ = compare(_kv(**{f"placements{suffix}": True}),
+                                  _kv(**{f"placements{suffix}": False}),
+                                  tolerance=0.2)
+            assert len(failures) == 1, suffix
+            assert "flip" in failures[0]
+
+    def test_bool_false_to_true_is_not_a_flip(self):
+        failures, _ = compare(_kv(x_match=False), _kv(x_match=True),
+                              tolerance=0.2)
+        assert failures == []
+
+    def test_new_key_is_a_note_not_a_failure(self):
+        failures, notes = compare(
+            _kv(a_speedup_x=2.0),
+            _kv(a_speedup_x=2.0, brand_new_speedup_x=1.0),
+            tolerance=0.2)
+        assert failures == []
+        assert any("new key" in n for n in notes)
+
+    def test_missing_key_is_a_note_not_a_failure(self):
+        failures, notes = compare(_kv(gone_speedup_x=2.0), _kv(),
+                                  tolerance=0.2)
+        assert failures == []
+        assert any("missing" in n for n in notes)
+
+    def test_ungated_keys_ignored(self):
+        failures, _ = compare(_kv(raw_us=100.0, count=5),
+                              _kv(raw_us=9999.0, count=1), tolerance=0.2)
+        assert failures == []
+
+
+class TestEndToEnd:
+    def _dump(self, d, name, payload):
+        (d / name).write_text(json.dumps(payload))
+
+    def test_main_green_and_red(self, tmp_path, monkeypatch, capsys):
+        base, fresh = tmp_path / "base", tmp_path / "fresh"
+        base.mkdir(), fresh.mkdir()
+        self._dump(base, "BENCH_drain.json",
+                   {"drain_speedup_x": 9.0, "placements_match": True})
+        self._dump(fresh, "BENCH_drain.json",
+                   {"drain_speedup_x": 8.5, "placements_match": True})
+        monkeypatch.setattr("sys.argv", [
+            "check_regression", "--baseline", str(base),
+            "--fresh", str(fresh)])
+        assert main() == 0
+        assert "OK" in capsys.readouterr().out
+
+        self._dump(fresh, "BENCH_drain.json",
+                   {"drain_speedup_x": 2.0, "placements_match": True})
+        assert main() == 1
+        assert "FAILURES" in capsys.readouterr().out
+
+    def test_unreadable_dump_exits_loudly(self, tmp_path):
+        (tmp_path / "BENCH_bad.json").write_text("{not json")
+        with pytest.raises(SystemExit, match="unreadable"):
+            _load(str(tmp_path))
+
+    def test_empty_baseline_dir_exits_loudly(self, tmp_path, monkeypatch):
+        base, fresh = tmp_path / "base", tmp_path / "fresh"
+        base.mkdir(), fresh.mkdir()
+        self._dump(fresh, "BENCH_x.json", {"a_speedup_x": 1.0})
+        monkeypatch.setattr("sys.argv", [
+            "check_regression", "--baseline", str(base),
+            "--fresh", str(fresh)])
+        with pytest.raises(SystemExit, match="no BENCH"):
+            main()

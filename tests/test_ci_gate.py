@@ -1,0 +1,79 @@
+"""The tier-1 floor gate (``benchmarks/ci_gate.py``).
+
+This regex-over-pytest-output logic decides whether CI goes red; it
+lived untested inline in ci.yml until PR 8.  The cases pin the exact
+historical behavior (including the ``(\\d+) error`` regex matching both
+"error" and "errors") plus the failure-shaped inputs the inline gate
+never met: empty output, crash-before-summary, summary with only
+failures.
+"""
+
+import pytest
+
+from benchmarks.ci_gate import gate, main, parse_counts
+
+
+class TestParseCounts:
+    def test_clean_summary(self):
+        c = parse_counts("392 passed in 578.67s (0:09:38)")
+        assert c == {"passed": 392, "failed": 0, "errors": 0}
+
+    def test_mixed_summary(self):
+        c = parse_counts("3 failed, 380 passed, 2 errors in 60.00s")
+        assert c == {"passed": 380, "failed": 3, "errors": 2}
+
+    def test_singular_error(self):
+        assert parse_counts("1 error in 2.1s")["errors"] == 1
+
+    def test_empty_output_reads_as_zero(self):
+        assert parse_counts("") == {"passed": 0, "failed": 0, "errors": 0}
+
+
+class TestGate:
+    def test_floor_met_passes(self):
+        ok, msg = gate("392 passed in 10s", floor=375)
+        assert ok and "OK" in msg and "392 passed" in msg
+
+    def test_below_floor_fails_even_when_green(self):
+        ok, msg = gate("100 passed in 10s", floor=375)
+        assert not ok and "FAIL" in msg
+
+    def test_any_failure_fails_above_floor(self):
+        ok, _ = gate("1 failed, 500 passed in 10s", floor=375)
+        assert not ok
+
+    def test_any_error_fails_above_floor(self):
+        ok, _ = gate("2 errors, 500 passed in 10s", floor=375)
+        assert not ok
+
+    def test_crash_before_summary_fails(self):
+        ok, _ = gate("Traceback (most recent call last): ...", floor=1)
+        assert not ok
+
+    def test_floor_zero_still_blocks_failures(self):
+        ok, _ = gate("5 failed in 1s", floor=0)
+        assert not ok
+        ok, _ = gate("no tests ran in 0.1s", floor=0)
+        assert ok  # explicit floor of 0 with nothing broken
+
+
+class TestMain:
+    def test_exit_codes_from_file(self, tmp_path, capsys):
+        report = tmp_path / "pytest.out"
+        report.write_text("400 passed in 9s")
+        assert main([str(report), "--floor", "375"]) == 0
+        report.write_text("374 passed in 9s")
+        assert main([str(report), "--floor", "375"]) == 1
+        out = capsys.readouterr().out
+        assert "tier-1 gate" in out
+
+    def test_stdin_dash(self, monkeypatch):
+        import io
+        monkeypatch.setattr("sys.stdin", io.StringIO("380 passed"))
+        assert main(["-", "--floor", "375"]) == 0
+
+    def test_floor_is_required(self, tmp_path):
+        report = tmp_path / "pytest.out"
+        report.write_text("400 passed")
+        with pytest.raises(SystemExit):
+            main([str(report)])

@@ -1,0 +1,200 @@
+"""Runtime dispatch/compile contracts (``repro.analysis.contracts``).
+
+The engine's performance story rests on three invariants that every
+differential test is blind to — placements stay bitwise-identical
+whether the engine compiles one program or one per event.  This suite
+makes them fail loudly instead:
+
+* **one program per drain** — a queue within ``DRAIN_CAP`` dispatches
+  whole: one ``admission.drain`` dispatch per ``drain()`` call and zero
+  new compiles once the pow2 buckets are warm;
+* **bounded compiled-shape count under bucket routing** — a 200-task
+  DAG replay whose dependency frontier wanders stays within a fixed
+  compile budget, and a second replay with a different seed compiles
+  NOTHING new (every frontier size lands in an already-compiled pow2/
+  pow4 bucket);
+* **zero rebuild on churn** — node join/leave never re-uploads the
+  device-resident lane state; ``admission.dev_sync`` fires exactly once
+  per replay (the initial upload).
+
+Mechanics: compiles are counted through jax's monitoring hook (fires
+once per backend compilation, never on a cache hit); dispatches are
+self-reported by the engine's call sites via ``record_dispatch``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (Budget, DispatchBudgetError,
+                                      dispatch_budget, record_dispatch)
+from repro.core import RetrySpec
+from repro.sched import ClusterSim, ElasticPlanner, FaultSchedule
+
+from test_admission_fused import _mk_lanes, _mk_state, _storm_env
+from test_cluster_packed import _nodes, _workload
+from test_faults import _workload as _timed_workload
+
+
+# ------------------------------------------------------- budget mechanics
+class TestDispatchBudgetUnit:
+    def test_compile_counting_and_cache_hits(self):
+        import jax
+        import jax.numpy as jnp
+        jnp.ones(16).block_until_ready()  # warm implicit constructors
+
+        fn = jax.jit(lambda x: x * 3 + 1)
+        with dispatch_budget() as cold:
+            fn(jnp.ones(16)).block_until_ready()
+        assert cold.compiles == 1
+        with dispatch_budget(compiles=0) as warm:
+            fn(jnp.ones(16)).block_until_ready()
+        assert warm.compiles == 0
+
+    def test_compile_budget_violation_raises(self):
+        import jax
+        import jax.numpy as jnp
+        with pytest.raises(DispatchBudgetError, match="compiled"):
+            with dispatch_budget(compiles=0):
+                jax.jit(lambda x: x - 7)(jnp.ones(4)).block_until_ready()
+
+    def test_dispatch_tags_and_forbid(self):
+        record_dispatch("t.outside")  # before the scope: not counted
+        with dispatch_budget(dispatches=3, tags=("t.a",)) as b:
+            record_dispatch("t.a", 2)
+            record_dispatch("t.b", 5)  # untagged for this budget
+        assert b.tag_counts["t.a"] == 2
+        assert b.tag_counts["t.b"] == 5
+        assert b.dispatches == 2
+        with pytest.raises(DispatchBudgetError, match="forbidden"):
+            with dispatch_budget(forbid=("t.boom",)):
+                record_dispatch("t.boom")
+
+    def test_dispatch_ceiling_violation(self):
+        with pytest.raises(DispatchBudgetError, match="launched"):
+            with dispatch_budget(dispatches=1):
+                record_dispatch("t.c", 2)
+
+    def test_budget_readable_after_exit(self):
+        with dispatch_budget() as b:
+            record_dispatch("t.after", 4)
+        assert isinstance(b, Budget)
+        assert b.tag_counts["t.after"] == 4
+        assert b.violations() == []
+
+
+# -------------------------------------------------- one program per drain
+class TestOneProgramPerDrain:
+    @staticmethod
+    def _scripted_drains(seed=8, caps=(40.0, 20.0, 36.0)):
+        """Deterministic drain sequence: admit 14 lanes, drain three
+        times with a release in between — walks the empty AND occupied
+        pow4 resident buckets."""
+        adm = _mk_state("fused", caps=caps)
+        lanes = _mk_lanes(adm, np.random.default_rng(seed), 14)
+        placed = adm.drain(0.0, lanes)
+        if placed:
+            ji, ni = placed[0]
+            adm.release(ni, ji)
+        adm.drain(7.0, lanes)
+        adm.drain(40.0, lanes)
+        return adm
+
+    def test_warm_drains_compile_nothing(self):
+        """A second identically-shaped drain sequence on a FRESH state
+        reuses every cached while-loop program: zero new compiles,
+        exactly one ``admission.drain`` dispatch per ``drain()`` call.
+        Values (caps, `now`, residency) change between the drains inside
+        the scope; shapes are what the bucket routing must keep stable."""
+        self._scripted_drains()  # warm every pow2/pow4 bucket the script hits
+        with dispatch_budget(compiles=0) as b:
+            adm = self._scripted_drains()
+        assert b.tag_counts["admission.drain"] == 3
+        assert adm.stats["drain_dispatches"] == adm.stats["drains"] == 3
+
+    def test_different_caps_same_program(self):
+        """Capacity values are operands, not shapes: once each scripted
+        config has warmed its buckets, fresh states under either config
+        compile nothing new."""
+        self._scripted_drains(caps=(40.0, 20.0, 36.0))
+        self._scripted_drains(caps=(24.0, 64.0, 18.0))
+        with dispatch_budget(compiles=0) as b:
+            self._scripted_drains(caps=(40.0, 20.0, 36.0))
+            self._scripted_drains(caps=(24.0, 64.0, 18.0))
+        assert b.compiles == 0
+        assert b.tag_counts["admission.drain"] == 6
+
+    def test_elastic_drain_shares_program(self):
+        """ElasticPlanner's fused drain rides the same compiled program
+        family; a scripted submit/churn run stays one dispatch per
+        drain with no recompiles once warm."""
+        def run(seed):
+            rng = np.random.default_rng(seed)
+            pl = ElasticPlanner(backend="fused")
+            pl.node_join("n0", 48.0)
+            pl.node_join("n1", 32.0)
+            for step in range(12):
+                pl.submit(f"j{step}",
+                          _storm_env(rng, float(rng.uniform(6, 24))),
+                          float(step))
+            pl.drain(20.0)
+            return pl
+
+        run(0)  # warm every bucket this script reaches
+        with dispatch_budget(compiles=0) as b:
+            pl = run(0)  # same script, fresh planner: all shapes cached
+        assert b.tag_counts["admission.drain"] >= 1
+        del pl
+
+
+# ------------------------------------- bounded shapes while frontier wanders
+class TestBoundedShapesUnderWander:
+    # Measured cold on jax 0.4.37 CPU: 14 compiles for the full replay
+    # (drain program per queue bucket + columns + scatter + probe).  The
+    # bound is deliberately loose — without pow2/pow4 bucketing the
+    # wandering frontier compiles per distinct size and blows through it
+    # by an order of magnitude.
+    COLD_COMPILE_BUDGET = 40
+
+    def _replay(self, seed):
+        from repro.workloads import scenarios
+        wf = scenarios.get("workload_replay", n_tasks=200, seed=seed)
+        sim = ClusterSim(_nodes(), engine="fused", drain="device")
+        return sim.run(wf.to_jobs(under_frac=0.2, seed=seed),
+                       RetrySpec("ksplus"))
+
+    def test_dag_frontier_compiles_stay_bucketed(self):
+        with dispatch_budget(compiles=self.COLD_COMPILE_BUDGET) as cold:
+            self._replay(seed=0)
+        assert cold.tag_counts["admission.drain"] > 50  # frontier wandered
+        # A different workload, same scenario family: every frontier
+        # size lands in an already-compiled bucket.
+        with dispatch_budget(compiles=0) as warm:
+            self._replay(seed=3)
+        assert warm.tag_counts["admission.drain"] > 50
+        assert warm.compiles == 0
+
+
+# --------------------------------------------------- zero rebuild on churn
+class TestZeroRebuildOnChurn:
+    def test_node_churn_never_resyncs_device_state(self):
+        """Joins and leaves only change the next dispatch's operands;
+        the packed lane buffers upload exactly once per replay."""
+        faults = FaultSchedule.node_churn(_nodes(), rate=0.04,
+                                          horizon=250.0, seed=5)
+        sim = ClusterSim(_nodes(), engine="fused", drain="device")
+        with dispatch_budget() as b:
+            res = sim.run(_timed_workload(48, seed=5, under_frac=0.4),
+                          RetrySpec("ksplus"), faults=faults)
+        assert res.evictions > 0  # churn actually happened
+        assert b.tag_counts["admission.dev_sync"] == 1
+        assert b.tag_counts["admission.drain"] >= res.evictions // 2
+
+    def test_storm_rejoin_no_rebuild(self):
+        faults = FaultSchedule.preemption_storm(
+            _nodes(), t=30.0, frac=0.9, seed=2, down_time=35.0)
+        sim = ClusterSim(_nodes(), engine="fused", drain="device")
+        with dispatch_budget(forbid=()) as b:
+            res = sim.run(_timed_workload(40, seed=3, under_frac=0.5),
+                          RetrySpec("ksplus"), faults=faults)
+        assert res.evictions > 0
+        assert b.tag_counts["admission.dev_sync"] == 1
