@@ -920,6 +920,63 @@ def bench_churn_replay(full: bool):
         }, f, indent=1)
 
 
+# --------------------------------------------------------------------- serve
+def bench_serve(full: bool):
+    """serve_saturation: the multi-tenant prediction service under load.
+
+    Wraps :func:`repro.serve.bench.run_saturation` (same payload as
+    ``python -m repro.serve``) and dumps BENCH_serve.json:
+
+    * throughput — one seeded mixed-tenant tape through a micro-batched
+      server vs an unbatched one (identical dispatch code, batch size 1);
+      the speedup is gated (``serve_speedup_x``) and every batched plan
+      must be bitwise equal to its unbatched twin (``serve_bitwise``);
+    * latency — virtual-clock open-loop Poisson arrivals; p50/p99 are
+      reported, not gated (wall-clock on shared runners is noisy);
+    * discipline — prediction-cache hit rate on repeat traffic
+      (``serve_cache_hit_ok``) and the warm zero-compile /
+      zero-re-upload pin under dispatch_budget (``serve_warm_ok``).
+    """
+    from repro.serve.bench import run_saturation
+
+    n = 4096 if full else 2048
+    out = run_saturation(tenants=8, n_requests=n, rate_rps=2000.0, seed=0)
+    thr, lat, disc = out["throughput"], out["latency"], out["discipline"]
+    assert thr["bitwise"], "batched plans diverged from unbatched twins"
+    assert disc["warm_zero_compiles"], \
+        "warm serving path compiled or re-uploaded traces"
+
+    _row("serve_speedup", 0.0,
+         f"{thr['speedup_x']:.2f}x unbatched ({thr['n_requests']} reqs, "
+         f"8 tenants, mean batch {thr['mean_batch']:.1f}, bitwise)")
+    _row("serve_req_s_batched", 0.0, f"{thr['req_s_batched']:.0f} req/s")
+    _row("serve_latency", 0.0,
+         f"p50 {lat['p50_ms']:.2f} ms, p99 {lat['p99_ms']:.2f} ms "
+         f"@ {lat['rate_rps']:.0f} req/s open-loop")
+    _row("serve_cache_hit_rate", 0.0,
+         f"{disc['cache_hit_rate']:.2f} on repeat-pool traffic")
+    _row("serve_warm_discipline", 0.0,
+         f"zero compiles, {disc['distinct_shapes']} distinct bucket "
+         f"shapes after warmup")
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({
+            "serve_requests": thr["n_requests"],
+            "serve_tenants": thr["tenants"],
+            "serve_speedup_x": thr["speedup_x"],
+            "serve_req_s_batched": thr["req_s_batched"],
+            "serve_req_s_unbatched": thr["req_s_unbatched"],
+            "serve_mean_batch": thr["mean_batch"],
+            "serve_bitwise": bool(thr["bitwise"]),
+            "serve_p50_ms": lat["p50_ms"],
+            "serve_p99_ms": lat["p99_ms"],
+            "serve_latency_rate_rps": lat["rate_rps"],
+            "serve_cache_hit_rate": disc["cache_hit_rate"],
+            "serve_cache_hit_ok": bool(disc["cache_hit_ok"]),
+            "serve_warm_ok": bool(disc["warm_zero_compiles"]),
+            "serve_distinct_shapes": disc["distinct_shapes"],
+        }, f, indent=1)
+
+
 # ------------------------------------------------------------------- kernels
 def bench_kernels(full: bool):
     """Interpret-mode kernel micro-benchmarks vs their jnp oracles."""
@@ -1010,6 +1067,7 @@ BENCHES = {
     "workload_replay": bench_workload_replay,
     "drain": bench_drain,
     "churn_replay": bench_churn_replay,
+    "serve": bench_serve,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }

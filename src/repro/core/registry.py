@@ -50,6 +50,7 @@ from repro.core.ksplus import KSPlus, KSPlusAuto, MemoryPredictor
 __all__ = [
     "MethodContext",
     "MethodSpec",
+    "MissingCapabilityError",
     "register_method",
     "unregister_method",
     "get_spec",
@@ -58,6 +59,7 @@ __all__ = [
     "name_of",
     "make",
     "resolve",
+    "check_capabilities",
     "try_retry_spec",
     "DEFAULT_OFFSET_GRID",
     "tune_offset",
@@ -97,6 +99,27 @@ class MethodSpec:
 
 _SPECS: Dict[str, MethodSpec] = {}   # canonical name -> spec, insertion order
 _ALIASES: Dict[str, str] = {}        # alias -> canonical name
+
+# The flag names check_capabilities/make/resolve accept in ``require=``.
+CAPABILITY_FLAGS: Tuple[str, ...] = ("online", "packed", "multi_segment")
+
+
+class MissingCapabilityError(LookupError):
+    """A resolve-time capability check failed.
+
+    The caller asked for a path (``require=("packed",)``, ``("online",)``,
+    ...) that the method's spec declares unsupported.  Raised by
+    :func:`make` / :func:`resolve` / :func:`check_capabilities` so harness
+    code fails loudly at construction instead of deep inside a batched
+    dispatch.
+    """
+
+    def __init__(self, method: str, flag: str):
+        super().__init__(
+            f"method {method!r} does not support the {flag!r} path "
+            f"(registered with {flag}=False)")
+        self.method = method
+        self.flag = flag
 
 
 def register_method(name: str, *, retry: RetrySpec, cls: type,
@@ -152,18 +175,81 @@ def method_names() -> List[str]:
 
 
 def make(name: str, *, k: int = 4, machine_memory: float = 128.0,
-         default_limit: float = 8.0) -> MemoryPredictor:
-    """Construct a fresh method instance from its registry name."""
+         default_limit: float = 8.0,
+         require: Sequence[str] = ()) -> MemoryPredictor:
+    """Construct a fresh method instance from its registry name.
+
+    ``require`` names capability flags the caller's code path depends on
+    (``"online"``, ``"packed"``, ``"multi_segment"``); a spec registered
+    with any of them False raises :class:`MissingCapabilityError` here,
+    at resolve time, with the method and flag named.
+    """
+    spec = get_spec(name)
+    _check_spec(spec, require)
     ctx = MethodContext(k=k, machine_memory=machine_memory,
                         default_limit=default_limit)
-    return get_spec(name).factory(ctx)
+    return spec.factory(ctx)
 
 
-def resolve(method: Union[str, MemoryPredictor], **ctx) -> MemoryPredictor:
-    """A method instance from a registry name (constructed) or pass-through."""
+def resolve(method: Union[str, MemoryPredictor], *,
+            require: Sequence[str] = (), **ctx) -> MemoryPredictor:
+    """A method instance from a registry name (constructed) or pass-through.
+
+    Capability validation (``require=``, see :func:`make`) applies to both
+    forms: instances resolve back to their spec via the same exact-type +
+    ``match`` rules as :func:`name_of`.
+    """
     if isinstance(method, str):
-        return make(method, **ctx)
+        return make(method, require=require, **ctx)
+    check_capabilities(method, require=require)
     return method
+
+
+def _spec_of_instance(method: MemoryPredictor) -> Optional[MethodSpec]:
+    """The spec an instance resolves to (``name_of``'s matching rules),
+    or None for unregistered classes."""
+    cls_specs = [s for s in _SPECS.values() if type(method) is s.cls]
+    for spec in cls_specs:
+        if spec.match is None or spec.match(method):
+            return spec
+    return cls_specs[0] if cls_specs else None
+
+
+def _check_spec(spec: MethodSpec, require: Sequence[str]) -> None:
+    for flag in require:
+        if flag not in CAPABILITY_FLAGS:
+            raise ValueError(
+                f"unknown capability flag {flag!r} "
+                f"(valid: {', '.join(CAPABILITY_FLAGS)})")
+        if not getattr(spec, flag):
+            raise MissingCapabilityError(spec.name, flag)
+
+
+def check_capabilities(method: Union[str, MemoryPredictor],
+                       require: Sequence[str] = ()) -> None:
+    """Raise :class:`MissingCapabilityError` unless ``method`` carries
+    every flag in ``require``.
+
+    Accepts a registry name or an instance.  An instance of an
+    *unregistered* class has no spec to consult; the one structurally
+    visible capability (``packed`` ⇔ ``predict_packed`` exists) is still
+    validated, the rest pass (custom methods opt into flags by
+    registering).
+    """
+    if isinstance(method, str):
+        _check_spec(get_spec(method), require)
+        return
+    spec = _spec_of_instance(method)
+    if spec is not None:
+        _check_spec(spec, require)
+        return
+    for flag in require:
+        if flag not in CAPABILITY_FLAGS:
+            raise ValueError(
+                f"unknown capability flag {flag!r} "
+                f"(valid: {', '.join(CAPABILITY_FLAGS)})")
+        if flag == "packed" and not hasattr(method, "predict_packed"):
+            raise MissingCapabilityError(name_of(method), flag)
 
 
 def name_of(method: MemoryPredictor) -> str:

@@ -1,10 +1,16 @@
 """Serving driver: batched prefill + decode with KS+ admission control.
 
 Requests with varying prompt lengths arrive in a queue; the server admits a
-batch when the KS+-predicted memory envelope of (prefill spike → growing KV
+batch when the predicted memory envelope of (prefill spike → growing KV
 cache) fits the device budget, then runs prefill and a decode loop.  The
 envelope model is fit online from observed per-request memory curves —
 the paper's observe → segment → predict loop applied to serving.
+
+Envelope predictions go through :mod:`repro.serve`: an in-process
+:class:`~repro.serve.PredictionServer` (``batching=False`` — admission is
+a closed loop, one probe at a time) hosting a single ``kv-envelope``
+family whose method is resolved by name through :mod:`repro.core.registry`
+(``--method``, default ``ks+``), not constructed directly.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --requests 12
 """
@@ -21,9 +27,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, smoke_config
-from repro.core import KSPlus
 from repro.models import decode_step, prefill
 from repro.runtime import make_decode_step, make_prefill_step
+from repro.serve import PredictionServer
 
 __all__ = ["serve_demo", "kv_envelope"]
 
@@ -43,22 +49,25 @@ def kv_envelope(cfg, batch: int, prompt: int, new_tokens: int) -> np.ndarray:
 
 def serve_demo(arch: str, *, requests: int = 12, max_batch: int = 4,
                prompt_lens=(32, 64, 96), new_tokens: int = 16,
-               budget_gb: float = 2.0, seed: int = 0):
+               budget_gb: float = 2.0, seed: int = 0, method: str = "ks+"):
     cfg = smoke_config(arch)
     if cfg.is_encoder_only:
         raise SystemExit(f"{arch} is encoder-only; use encode benchmarks")
     rng = np.random.default_rng(seed)
     queue: List[int] = [int(rng.choice(prompt_lens)) for _ in range(requests)]
 
-    # Online KS+ envelope model over 'input size' = batch*prompt tokens.
-    env_model = KSPlus(k=3)
+    # Online envelope model over 'input size' = batch*prompt tokens,
+    # served by the prediction service (method resolved via the registry).
     obs_m, obs_d, obs_i = [], [], []
     for b in (1, 2, max_batch):
         for p in prompt_lens:
             obs_m.append(kv_envelope(cfg, b, p, new_tokens))
             obs_d.append(1.0)
             obs_i.append(float(b * p))
-    env_model.fit(obs_m, obs_d, obs_i)
+    srv = PredictionServer(batching=False)
+    srv.add_tenant("admission")
+    srv.seed_family("kv-envelope", method, obs_m, obs_d, obs_i)
+    env = srv.client("admission")
 
     params = None
     prefill_fn = None
@@ -73,7 +82,7 @@ def serve_demo(arch: str, *, requests: int = 12, max_batch: int = 4,
         batch = []
         while queue and len(batch) < max_batch:
             cand = batch + [queue[0]]
-            plan = env_model.predict(float(len(cand) * max(cand)))
+            plan = env.predict("kv-envelope", float(len(cand) * max(cand)))
             if plan.peaks.max() > budget_gb and batch:
                 break
             batch.append(queue.pop(0))
@@ -105,9 +114,12 @@ def main():
     ap.add_argument("--arch", choices=ARCHS, default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--method", default="ks+",
+                    help="registry name of the envelope model")
     args = ap.parse_args()
     print(json.dumps(serve_demo(args.arch, requests=args.requests,
-                                new_tokens=args.new_tokens), indent=1))
+                                new_tokens=args.new_tokens,
+                                method=args.method), indent=1))
 
 
 if __name__ == "__main__":

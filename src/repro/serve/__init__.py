@@ -1,0 +1,44 @@
+"""Multi-tenant prediction-as-a-service (ROADMAP item 3).
+
+The request path::
+
+    client.predict ──► PredictionServer.submit ──► PredictionCache hit?
+            │                                         │ yes: resolve now
+            ▼ no                                      ▼
+    MicroBatcher (≤ max_wait_s) ──► buckets ──► one batched dispatch per
+    bucket (gathered SegmentModel eval / predict_packed /
+    simulate_fleet_many) ──► scatter to ServeFutures
+
+Layers: :mod:`~repro.serve.batcher` (coalescing queue),
+:mod:`~repro.serve.tenants` (copy-on-refit snapshot state),
+:mod:`~repro.serve.cache` (prediction + program/trace caches),
+:mod:`~repro.serve.server` (dispatch + the synchronous client),
+:mod:`~repro.serve.bench` (the ``serve_saturation`` harness behind
+``python -m repro.serve``).
+"""
+
+from repro.serve.batcher import (Backpressure, MicroBatcher, ServeFuture,
+                                 ServeRequest)
+from repro.serve.cache import CacheStats, PredictionCache, ProgramCache
+from repro.serve.server import (EvaluateResult, PredictionServer,
+                                ServeClient, TuneResult)
+from repro.serve.tenants import (ModelSnapshot, TenantRegistry,
+                                 UnknownFamilyError, UnknownTenantError)
+
+__all__ = [
+    "Backpressure",
+    "MicroBatcher",
+    "ServeFuture",
+    "ServeRequest",
+    "CacheStats",
+    "PredictionCache",
+    "ProgramCache",
+    "EvaluateResult",
+    "TuneResult",
+    "PredictionServer",
+    "ServeClient",
+    "ModelSnapshot",
+    "TenantRegistry",
+    "UnknownFamilyError",
+    "UnknownTenantError",
+]

@@ -198,3 +198,85 @@ class TestZeroRebuildOnChurn:
                           RetrySpec("ksplus"), faults=faults)
         assert res.evictions > 0
         assert b.tag_counts["admission.dev_sync"] == 1
+
+
+# ------------------------------------------------------- serving contracts
+class TestServeContracts:
+    """The serving path's dispatch discipline (see repro.serve):
+
+    * one ``serve.batch`` dispatch per bucket flush,
+    * zero compiles on warm traffic (pow2 lane padding + per-snapshot
+      trace residency bound the shape set),
+    * ``serve.dev_sync`` fires once per (tenant, family, snapshot) and
+      never again until a refit forks the snapshot.
+    """
+
+    def _warm_server(self, tenants=2):
+        from repro.serve.bench import FAMILIES, build_server, request_tape
+
+        srv = build_server(tenants=tenants, batching=True, max_batch=64,
+                           seed=0)
+        futs = [srv.submit("predict", t, f, x)
+                for t, f, x in request_tape(128, tenants, seed=1)]
+        srv.drain()
+        [f.result(0) for f in futs]
+        for t in range(tenants):
+            client = srv.client(f"tenant{t}")
+            for family, _ in FAMILIES:
+                client.evaluate(family)
+        srv.client("tenant0").tune_offset("align")
+        return srv
+
+    def test_warm_serve_zero_compiles_one_batch_per_bucket(self):
+        from repro.serve.bench import FAMILIES, request_tape
+
+        srv = self._warm_server()
+        before = srv._batcher.stats["batches"]
+        with dispatch_budget(compiles=0,
+                             forbid=("serve.dev_sync",)) as warm:
+            futs = [srv.submit("predict", t, f, x)
+                    for t, f, x in request_tape(96, 2, seed=7)]
+            srv.drain()
+            [f.result(0) for f in futs]
+            for t in range(2):
+                client = srv.client(f"tenant{t}")
+                for family, _ in FAMILIES:
+                    client.evaluate(family)
+            srv.client("tenant0").tune_offset("align")
+        flushed_buckets = srv._batcher.stats["batches"] - before
+        # exactly one serve.batch dispatch per bucket flush, nothing else
+        assert warm.tag_counts["serve.batch"] == flushed_buckets
+        assert warm.compiles == 0
+
+    def test_dev_sync_once_per_snapshot_then_refit_scoped(self):
+        import numpy as np
+
+        from repro.core.predictor import ExecutionOutcome
+        from repro.serve.bench import build_server
+
+        srv = build_server(tenants=2, batching=True, seed=0)
+        client = srv.client("tenant0")
+        with dispatch_budget() as b:
+            client.evaluate("align")
+            client.evaluate("align")          # warm: resident traces
+            srv.client("tenant1").evaluate("align")  # own (tenant, sid) key
+        assert b.tag_counts["serve.dev_sync"] == 2
+        client.observe("align", ExecutionOutcome(
+            mem=np.full(40, 9.0), dt=1.0, input_gb=3.0, succeeded=True))
+        assert client.refit("align")
+        with dispatch_budget() as after:
+            client.evaluate("align")          # forked sid: one new upload
+            client.evaluate("align")
+            srv.client("tenant1").evaluate("align")  # old sid: still warm
+        assert after.tag_counts["serve.dev_sync"] == 1
+
+    def test_cache_hit_tag_fires_on_submit_fast_path(self):
+        from repro.serve.bench import build_server
+
+        srv = build_server(tenants=1, batching=True, seed=0)
+        client = srv.client("tenant0")
+        client.predict("align", 2.0)
+        with dispatch_budget() as b:
+            assert client.predict("align", 2.0) is not None
+        assert b.tag_counts["serve.cache_hit"] == 1
+        assert b.tag_counts.get("serve.batch", 0) == 0  # no dispatch at all

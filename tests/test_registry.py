@@ -107,6 +107,45 @@ class TestRegistry:
         assert registry.try_retry_spec("ks+") == RetrySpec("ksplus")
         assert registry.try_retry_spec("double") is None  # RetrySpec kind
 
+    def test_capability_validation_at_resolve_time(self):
+        """require= fails loudly at make/resolve, not deep in dispatch."""
+        with pytest.raises(registry.MissingCapabilityError, match="online"):
+            registry.make("tovar-ppm", require=("online",))
+        with pytest.raises(registry.MissingCapabilityError, match="online"):
+            registry.make("default", require=("online",))
+        with pytest.raises(registry.MissingCapabilityError,
+                           match="multi_segment"):
+            registry.resolve("witt-p95", require=("multi_segment",))
+        # the error names method and flag
+        try:
+            registry.make("default", require=("online",))
+        except registry.MissingCapabilityError as e:
+            assert e.method == "default" and e.flag == "online"
+        # satisfied requirements construct normally
+        m = registry.make("ks+", require=("online", "packed",
+                                          "multi_segment"))
+        assert isinstance(m, KSPlus)
+
+    def test_capability_validation_on_instances(self):
+        """Instances resolve back to their spec for the same checks."""
+        m = registry.make("tovar-ppm")
+        with pytest.raises(registry.MissingCapabilityError, match="online"):
+            registry.resolve(m, require=("online",))
+        assert registry.resolve(m, require=("packed",)) is m
+        registry.check_capabilities("witt", require=("online",))  # alias ok
+        with pytest.raises(ValueError, match="unknown capability flag"):
+            registry.make("ks+", require=("bogus",))
+
+    def test_capability_check_unregistered_instance(self):
+        """Unregistered methods: only the structural packed check applies."""
+
+        class Bare:
+            pass
+
+        registry.check_capabilities(Bare(), require=("online",))  # no spec
+        with pytest.raises(registry.MissingCapabilityError, match="packed"):
+            registry.check_capabilities(Bare(), require=("packed",))
+
 
 class TestSimulatorIntegration:
     def test_method_result_names_canonical(self):

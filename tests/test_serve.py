@@ -1,0 +1,361 @@
+"""repro.serve: batcher invariants, tenant state, caches, dispatch parity.
+
+The serving contract under test: batched responses are **bitwise equal**
+to per-request dispatch across mixed-tenant mixed-family traffic, tenant
+refits fork copy-on-write snapshots without perturbing other tenants,
+and caches invalidate exactly at refit scope.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.fleet import packed_predict, simulate_fleet_many
+from repro.core.predictor import ExecutionOutcome
+from repro.core.registry import MissingCapabilityError
+from repro.serve import (
+    Backpressure,
+    MicroBatcher,
+    PredictionCache,
+    PredictionServer,
+    ProgramCache,
+    ServeRequest,
+    TenantRegistry,
+    UnknownFamilyError,
+    UnknownTenantError,
+)
+from repro.serve.bench import FAMILIES, build_server, request_tape, synth_family
+
+
+def _req(payload, t=0.0, family="f", tenant="ten", kind="predict"):
+    return ServeRequest(kind=kind, tenant=tenant, family=family,
+                        payload=payload, arrival=t)
+
+
+def _recording_batcher(**kw):
+    calls = []
+
+    def dispatch(key, reqs):
+        calls.append((key, list(reqs)))
+        for r in reqs:
+            r.future.set_result(r.payload)
+
+    return MicroBatcher(dispatch, key_fn=lambda r: r.family, **kw), calls
+
+
+# ------------------------------------------------------------ the batcher
+class TestMicroBatcher:
+    def test_deadline_flush_with_single_queued_request(self):
+        now = [0.0]
+        bat, calls = _recording_batcher(max_wait_s=0.002,
+                                        clock=lambda: now[0])
+        fut = bat.submit(_req("only", t=0.0))
+        assert bat.pump(0.0015) == 0 and not fut.done  # deadline not due
+        assert bat.pump(0.002) == 1                    # due: flush of one
+        assert fut.done and fut.result(0) == "only"
+        assert len(calls) == 1 and len(calls[0][1]) == 1
+        assert bat.stats["deadline_flushes"] == 1
+
+    def test_full_queue_flushes_inline(self):
+        bat, calls = _recording_batcher(max_batch=4, max_wait_s=10.0)
+        futs = [bat.submit(_req(i)) for i in range(4)]
+        assert all(f.done for f in futs)  # saturation flush, no pump
+        assert bat.stats["full_flushes"] == 1 and bat.depth == 0
+        assert len(calls) == 1
+
+    def test_buckets_group_by_key_and_keep_fifo(self):
+        bat, calls = _recording_batcher(max_wait_s=10.0)
+        for i, fam in enumerate("abab"):
+            bat.submit(_req(i, family=fam))
+        assert bat.flush() == 4
+        assert len(calls) == 2  # one dispatch per bucket
+        by_key = {key: [r.payload for r in reqs] for key, reqs in calls}
+        assert by_key == {"a": [0, 2], "b": [1, 3]}
+
+    def test_backpressure_rejects_at_max_queue(self):
+        bat, _ = _recording_batcher(max_batch=2, max_queue=2,
+                                    max_wait_s=10.0)
+        bat._queue = [_req(0), _req(1)]  # saturate without flushing
+        with pytest.raises(Backpressure):
+            bat.submit(_req(2))
+        assert bat.stats["rejected"] == 1
+
+    def test_dispatch_error_scatters_to_futures(self):
+        def boom(key, reqs):
+            raise RuntimeError("bucket exploded")
+
+        bat = MicroBatcher(boom, key_fn=lambda r: r.family, max_wait_s=10.0)
+        f1, f2 = bat.submit(_req(1)), bat.submit(_req(2))
+        assert bat.flush() == 2
+        for f in (f1, f2):
+            with pytest.raises(RuntimeError, match="bucket exploded"):
+                f.result(0)
+
+    def test_threaded_deadline_loop(self):
+        bat, calls = _recording_batcher(max_wait_s=0.001)
+        bat.start()
+        try:
+            fut = bat.submit(_req("bg", t=time.monotonic()))
+            assert fut.result(timeout=2.0) == "bg"
+        finally:
+            bat.stop()
+        assert bat._thread is None and len(calls) == 1
+
+    def test_future_timeout(self):
+        bat, _ = _recording_batcher(max_wait_s=10.0)
+        fut = bat.submit(_req(0))
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=0.01)
+
+
+# ------------------------------------------------------------ tenant state
+class TestTenantRegistry:
+    def _seeded(self, n_tenants=2):
+        reg = TenantRegistry()
+        for i in range(n_tenants):
+            reg.add_tenant(f"t{i}")
+        mems, dts, inputs = synth_family(0)
+        reg.seed("fam", "ks+", mems, dts, inputs)
+        return reg
+
+    def test_seed_shares_one_frozen_snapshot(self):
+        reg = self._seeded()
+        s0, s1 = reg.snapshot("t0", "fam"), reg.snapshot("t1", "fam")
+        assert s0 is s1 and s0.version == 0
+        assert s0.method_name == "ks+"
+
+    def test_unknown_names_raise_loudly(self):
+        reg = self._seeded()
+        with pytest.raises(UnknownTenantError, match="ghost"):
+            reg.snapshot("ghost", "fam")
+        with pytest.raises(UnknownFamilyError, match="nope"):
+            reg.snapshot("t0", "nope")
+        with pytest.raises(ValueError, match="already exists"):
+            reg.add_tenant("t0")
+
+    def test_seed_requires_uniform_dt(self):
+        reg = TenantRegistry()
+        reg.add_tenant("t0")
+        mems, dts, inputs = synth_family(0)
+        dts = [1.0] * (len(dts) - 1) + [2.0]
+        with pytest.raises(ValueError, match="uniform"):
+            reg.seed("fam", "ks+", mems, dts, inputs)
+
+    def test_refit_forks_only_the_refitting_tenant(self):
+        reg = self._seeded()
+        old = reg.snapshot("t0", "fam")
+        events = []
+        reg.on_refit(lambda *a: events.append(a))
+        out = ExecutionOutcome(mem=np.full(40, 9.0), dt=1.0, input_gb=3.0,
+                               succeeded=True)
+        assert reg.observe("t0", "fam", out) == 1
+        assert reg.refit("t0", "fam") is True
+        new = reg.snapshot("t0", "fam")
+        assert new is not old and new.version == 1 and new.sid != old.sid
+        assert len(new.train_mems) == len(old.train_mems) + 1
+        assert reg.snapshot("t1", "fam") is old  # other tenant untouched
+        assert events == [("t0", "fam", old, new)]
+        # pending was consumed: the policy is no longer due
+        assert reg.refit("t0", "fam") is False
+
+    def test_refit_policy_not_due(self):
+        reg = self._seeded()
+        out = ExecutionOutcome(mem=np.full(40, 9.0), dt=1.0, input_gb=3.0,
+                               succeeded=True)
+        reg.observe("t0", "fam", out)
+        assert reg.refit("t0", "fam", policy="every_5") is False
+        assert reg.snapshot("t0", "fam").version == 0
+
+    def test_refit_offline_method_raises_named_error(self):
+        reg = TenantRegistry()
+        reg.add_tenant("t0")
+        mems, dts, inputs = synth_family(0)
+        reg.seed("frozen", "tovar-ppm", mems, dts, inputs)
+        reg.observe("t0", "frozen", ExecutionOutcome(
+            mem=np.full(40, 9.0), dt=1.0, input_gb=3.0, succeeded=True))
+        with pytest.raises(MissingCapabilityError, match="online"):
+            reg.refit("t0", "frozen")
+
+
+# ----------------------------------------------------------------- caches
+class TestCaches:
+    def test_prediction_cache_hits_evictions_invalidation(self):
+        cache = PredictionCache(max_entries=2)
+        assert cache.get(1, 2.0) is None
+        cache.put(1, 2.0, "a")
+        cache.put(1, 3.0, "b")
+        assert cache.get(1, 2.0) == "a"
+        cache.put(2, 2.0, "c")  # evicts the oldest (sid 1, 2.0)
+        assert cache.get(1, 2.0) is None
+        assert cache.stats.evictions == 1
+        assert cache.invalidate_sid(1) == 1  # the surviving sid-1 entry
+        assert cache.get(1, 3.0) is None
+        assert cache.get(2, 2.0) == "c"
+
+    def test_program_cache_shapes_and_trace_residency(self):
+        prog = ProgramCache()
+        assert prog.note_shape("ks+", "fam", 4, 1.0, (8, 4)) is False
+        assert prog.note_shape("ks+", "fam", 4, 1.0, (8, 4)) is True
+        assert prog.distinct_shapes == 1
+        builds = []
+        got1 = prog.trace_batch("t0", "fam", 7,
+                                lambda: builds.append(1) or "batch")
+        got2 = prog.trace_batch("t0", "fam", 7,
+                                lambda: builds.append(1) or "other")
+        assert got1 == got2 == "batch" and builds == [1]
+        assert prog.invalidate_tenant_family("t0", "fam") == 1
+        prog.trace_batch("t0", "fam", 8, lambda: builds.append(1) or "b2")
+        assert len(builds) == 2
+
+
+# --------------------------------------------------------- serve dispatch
+def _mixed_server(batching, *, tenants=6, seed=0):
+    srv = PredictionServer(batching=batching, cache_predictions=False,
+                           max_batch=64, max_wait_s=10.0)
+    for i in range(tenants):
+        srv.add_tenant(f"tenant{i}")
+    for j, (family, method) in enumerate(FAMILIES):
+        mems, dts, inputs = synth_family(seed + j)
+        srv.seed_family(family, method, mems, dts, inputs)
+    mems, dts, inputs = synth_family(seed + len(FAMILIES))
+    srv.seed_family("kseg", "k-segments-selective", mems, dts, inputs)
+    return srv
+
+
+class TestServeDispatch:
+    def test_batched_bitwise_equals_sequential_mixed_traffic(self):
+        """The precision contract over every method family at once."""
+        tape = request_tape(96, 6, seed=11)
+        tape += [(t, "kseg", x) for t, _, x in request_tape(24, 6, seed=12)]
+        batched = _mixed_server(batching=True)
+        seq = _mixed_server(batching=False)
+        futs = [batched.submit("predict", t, f, x) for t, f, x in tape]
+        batched.drain()
+        got = [f.result(0) for f in futs]
+        for (tenant, family, x), plan in zip(tape, got):
+            single = seq.client(tenant).predict(family, x)
+            assert np.array_equal(plan.starts, single.starts)
+            assert np.array_equal(plan.peaks, single.peaks)
+        # several tenants + families coalesced into few bucket dispatches
+        assert batched.stats()["batcher"]["flushes"] < len(tape) / 10
+
+    def test_served_plans_match_direct_method_oracle(self):
+        """Server output == the fitted method's own predict(), bitwise."""
+        srv = _mixed_server(batching=True)
+        oracles = {}
+        for j, (family, method) in enumerate(
+                tuple(FAMILIES) + (("kseg", "k-segments-selective"),)):
+            mems, dts, inputs = synth_family(j)
+            m = registry.make(method)
+            m.fit(mems, dts, inputs)
+            oracles[family] = m
+        client = srv.client("tenant0")
+        for family, m in oracles.items():
+            for x in (1.25, 3.0, 4.75):
+                plan = client.predict(family, x)
+                want = m.predict(x)
+                assert np.array_equal(plan.starts, want.starts), family
+                assert np.array_equal(plan.peaks, want.peaks), family
+
+    def test_prediction_cache_and_refit_invalidation(self):
+        srv = build_server(tenants=2, batching=True, seed=0)
+        c = srv.client("tenant0")
+        a = c.predict("align", 2.5)
+        b = c.predict("align", 2.5)
+        assert b is a  # submit-time hit: the cached plan object
+        assert srv.predictions.stats.hits == 1
+        # tenant1 shares the seed snapshot -> shares the cache entry
+        assert srv.client("tenant1").predict("align", 2.5) is a
+        c.observe("align", ExecutionOutcome(
+            mem=np.full(40, 9.0), dt=1.0, input_gb=2.5, succeeded=True))
+        assert c.refit("align") is True
+        after = c.predict("align", 2.5)
+        assert after is not a  # refit-scoped invalidation
+        assert srv.client("tenant1").predict("align", 2.5) is a  # unscathed
+
+    def test_evaluate_matches_fleet_oracle(self):
+        srv = build_server(tenants=1, batching=True, seed=0)
+        res = srv.client("tenant0").evaluate("align")
+        mems, dts, inputs = synth_family(0)
+        m = registry.make("ks+")
+        m.fit(mems, dts, inputs)
+        want = simulate_fleet_many(
+            [(packed_predict(m, inputs), m.retry_spec)], list(mems),
+            dts[0], machine_memory=128.0)[0]
+        assert res.total_gbs == float(want.total_gbs)
+        assert res.n == len(mems)
+        assert res.succeeded == int(want.succeeded.sum())
+
+    def test_tune_offset_matches_registry_oracle(self):
+        srv = build_server(tenants=1, batching=True, seed=0)
+        got = srv.client("tenant0").tune_offset("align")
+        mems, dts, inputs = synth_family(0)
+        m = registry.make("ks+")
+        m.fit(mems, dts, inputs)
+        best, totals = registry.tune_offset(m, mems, dts, inputs,
+                                            machine_memory=128.0)
+        assert got.best == best
+        assert np.array_equal(got.totals, totals)
+
+    def test_seed_rejects_unpacked_method(self):
+        class NoPacked:
+            def fit(self, mems, dts, inputs):
+                pass
+
+        @registry.register_method("test-nopack", retry=None, cls=NoPacked,
+                                  packed=False)
+        def _make(ctx):
+            return NoPacked()
+
+        try:
+            srv = PredictionServer()
+            srv.add_tenant("t0")
+            mems, dts, inputs = synth_family(0)
+            with pytest.raises(MissingCapabilityError, match="packed"):
+                srv.seed_family("fam", "test-nopack", mems, dts, inputs)
+        finally:
+            registry.unregister_method("test-nopack")
+
+    def test_unknown_kind_rejected(self):
+        srv = build_server(tenants=1, batching=False, seed=0)
+        with pytest.raises(ValueError, match="unknown request kind"):
+            srv.submit("frobnicate", "tenant0", "align", 1.0)
+
+    def test_threaded_server_round_trip(self):
+        srv = build_server(tenants=2, batching=True, seed=0,
+                           max_wait_s=0.001)
+        srv.start()
+        try:
+            plans = [srv.client("tenant0").predict("align", 1.0 + 0.1 * i)
+                     for i in range(5)]
+        finally:
+            srv.stop()
+        assert all(p.peaks.size > 0 for p in plans)
+
+    def test_concurrent_clients_threaded(self):
+        """Many client threads against the background flush loop."""
+        srv = build_server(tenants=4, batching=True, seed=0,
+                           max_wait_s=0.001)
+        srv.start()
+        errors = []
+
+        def worker(i):
+            try:
+                c = srv.client(f"tenant{i % 4}")
+                for j in range(20):
+                    p = c.predict("align", 1.0 + (i * 20 + j) % 40 * 0.1)
+                    assert p.peaks.size > 0
+            except BaseException as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        srv.stop()
+        assert not errors
