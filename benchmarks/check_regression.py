@@ -34,6 +34,9 @@ import sys
 HIGHER_BETTER = ("_speedup_x",)
 LOWER_BETTER = ("_overhead_x", "_dispatches_per_drain")
 BOOL_SUFFIXES = ("_match", "_ok", "_bitwise")
+# Keys every dump stamps for format versioning — neither gated nor
+# worth a missing/new note when dumps gain them.
+METADATA_KEYS = ("schema",)
 
 
 def _load(d: str) -> dict:
@@ -52,6 +55,8 @@ def _load(d: str) -> dict:
 def compare(baseline: dict, fresh: dict, tolerance: float):
     failures, notes = [], []
     for key, (src, base_v) in sorted(baseline.items()):
+        if key in METADATA_KEYS:
+            continue
         if key not in fresh:
             notes.append(f"  - {key} ({src}): missing from fresh run")
             continue
@@ -77,7 +82,7 @@ def compare(baseline: dict, fresh: dict, tolerance: float):
                     f"  ! {key} ({src}): {new_v:.3f} > {ceil:.3f} "
                     f"(baseline {base_v:.3f}, +{tolerance:.0%} ceiling)")
     for key, (src, _) in sorted(fresh.items()):
-        if key not in baseline:
+        if key not in baseline and key not in METADATA_KEYS:
             notes.append(f"  + {key} ({src}): new key (not gated)")
     return failures, notes
 

@@ -11,6 +11,7 @@ for CI.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import time
@@ -314,6 +315,7 @@ def bench_online_replay(full: bool):
         }, f, indent=1)
     with open("BENCH_online.json", "w") as f:
         json.dump({
+            "schema": 1,
             "online_replay_jobs": n_jobs,
             "online_replay_overhead_x": overhead,
             "online_replay_feedback_overhead_x": overhead_fb,
@@ -419,6 +421,7 @@ def bench_cluster_sim(full: bool):
          f"{sres[0].total_wastage_gbs:.0f}")
     with open("BENCH_cluster.json", "w") as f:
         json.dump({
+            "schema": 1,
             "cluster_sim_jobs": n_jobs,
             "cluster_sim_speedup_x": us_l / us_p,
             "cluster_sim_fused_speedup_x": us_l / us_fu,
@@ -555,6 +558,7 @@ def bench_admission(full: bool):
          f"{len(caps)} nodes x {res_per_node} residents")
     with open("BENCH_admission.json", "w") as f:
         json.dump({
+            "schema": 1,
             "admission_queued_jobs": B,
             "admission_speedup_x": speedup,
             "admission_fused_us": us_f,
@@ -635,6 +639,7 @@ def bench_workload_replay(full: bool):
          f"{bres.retries} retries, release order verified")
     with open("BENCH_workloads.json", "w") as f:
         json.dump({
+            "schema": 1,
             "workload_gen_tasks": n_big,
             "workload_gen_us": us_gen,
             "workload_replay_tasks": n_small,
@@ -779,6 +784,7 @@ print(json.dumps({
          f"unsharded={shard_out['us_unsharded']:.0f}us")
     with open("BENCH_drain.json", "w") as f:
         json.dump({
+            "schema": 1,
             "drain_replay_tasks": n,
             "drain_speedup_x": us_h / us_d,
             "drain_device_us": us_d,
@@ -794,6 +800,40 @@ print(json.dumps({
 
 
 # --------------------------------------------------------------- churn_replay
+def _churn_nodes():
+    from repro.sched import Node
+    return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0), Node(3, 96.0)]
+
+
+def _churn_jobs(n_jobs, seed=0, parents_every=0):
+    """The seeded churn workload shared by bench_churn_replay/bench_obs."""
+    import numpy as _np
+
+    from repro.core import AllocationPlan
+    from repro.sched import Job
+
+    rng = _np.random.default_rng(seed)
+    jobs = []
+    for j in range(n_jobs):
+        L = int(rng.integers(24, 90))
+        split = int(rng.uniform(0.4, 0.8) * L)
+        lo = float(rng.uniform(1.5, 3.0))
+        hi = float(rng.uniform(5.0, 11.0))
+        mem = _np.concatenate([_np.full(split, lo),
+                               _np.full(L - split, hi)])
+        mem = mem * (1.0 + 0.02 * _np.sin(_np.arange(L)))
+        scale = 0.9 if rng.uniform() < 0.2 else 1.12
+        plan = AllocationPlan(
+            starts=_np.asarray([0.0, max(split - 2.0, 1.0)]),
+            peaks=_np.asarray([lo * 1.15, hi * scale]))
+        parents = ((j - parents_every,) if parents_every
+                   and j >= parents_every else ())
+        jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
+                        dt=1.0, plan=plan, est_runtime=float(L),
+                        parents=parents))
+    return jobs
+
+
 def bench_churn_replay(full: bool):
     """Fused fault path vs the no-fault fused replay, plus the robustness
     suite's differential guarantee.
@@ -811,36 +851,12 @@ def bench_churn_replay(full: bool):
     * suite smoke — three make_suite grid points (storm, churn, arrivals)
       with ``check_oracle=True``.
     """
-    import numpy as _np
-
-    from repro.core import AllocationPlan, RetrySpec, ksplus_retry
-    from repro.sched import ClusterSim, FaultSchedule, Job, Node
+    from repro.core import RetrySpec, ksplus_retry
+    from repro.sched import ClusterSim, FaultSchedule
     from repro.workloads import SuiteCase, run_suite
 
-    def nodes():
-        return [Node(0, 48.0), Node(1, 64.0), Node(2, 32.0), Node(3, 96.0)]
-
-    def build_jobs(n_jobs, seed=0, parents_every=0):
-        rng = _np.random.default_rng(seed)
-        jobs = []
-        for j in range(n_jobs):
-            L = int(rng.integers(24, 90))
-            split = int(rng.uniform(0.4, 0.8) * L)
-            lo = float(rng.uniform(1.5, 3.0))
-            hi = float(rng.uniform(5.0, 11.0))
-            mem = _np.concatenate([_np.full(split, lo),
-                                   _np.full(L - split, hi)])
-            mem = mem * (1.0 + 0.02 * _np.sin(_np.arange(L)))
-            scale = 0.9 if rng.uniform() < 0.2 else 1.12
-            plan = AllocationPlan(
-                starts=_np.asarray([0.0, max(split - 2.0, 1.0)]),
-                peaks=_np.asarray([lo * 1.15, hi * scale]))
-            parents = ((j - parents_every,) if parents_every
-                       and j >= parents_every else ())
-            jobs.append(Job(jid=j, family="t", input_gb=1.0, mem=mem,
-                            dt=1.0, plan=plan, est_runtime=float(L),
-                            parents=parents))
-        return jobs
+    nodes = _churn_nodes
+    build_jobs = _churn_jobs
 
     n_jobs = 1000
     churn = FaultSchedule.node_churn(nodes(), rate=1.0 / 60.0,
@@ -904,6 +920,7 @@ def bench_churn_replay(full: bool):
          f"{total_evict} evictions")
     with open("BENCH_churn.json", "w") as f:
         json.dump({
+            "schema": 1,
             "churn_replay_jobs": n_jobs,
             "churn_replay_overhead_x": overhead,
             "churn_replay_plain_us": us_plain,
@@ -960,6 +977,7 @@ def bench_serve(full: bool):
          f"shapes after warmup")
     with open("BENCH_serve.json", "w") as f:
         json.dump({
+            "schema": 1,
             "serve_requests": thr["n_requests"],
             "serve_tenants": thr["tenants"],
             "serve_speedup_x": thr["speedup_x"],
@@ -974,6 +992,122 @@ def bench_serve(full: bool):
             "serve_cache_hit_ok": bool(disc["cache_hit_ok"]),
             "serve_warm_ok": bool(disc["warm_zero_compiles"]),
             "serve_distinct_shapes": disc["distinct_shapes"],
+        }, f, indent=1)
+
+
+# ----------------------------------------------------------------------- obs
+def bench_obs(full: bool):
+    """Observability overhead + timeline artifacts (BENCH_obs.json).
+
+    * overhead — the seeded churn workload replayed through the fused
+      engine untraced vs ``trace=True``; placements must stay bitwise
+      and the traced replay within 10% wall-clock (the measured
+      ``obs_overhead_x`` is what the regression guard gates — the
+      steady-state budget is <=3%, the in-bench ceiling leaves room for
+      runner noise);
+    * artifacts — the traced replay plus a traced serve tape exported as
+      a Perfetto/Chrome trace (``obs_trace.perfetto.json``), Prometheus
+      text (``obs_metrics.prom``) and a JSON metrics snapshot
+      (``obs_metrics.json``); the summarize CLI's ``read_events`` must
+      round-trip the trace.
+    """
+    from repro import obs
+    from repro.core import RetrySpec
+    from repro.sched import ClusterSim, FaultSchedule
+    from repro.serve.bench import _run_tape, build_server, request_tape
+
+    n_jobs = 600 if full else 300
+    churn = FaultSchedule.node_churn(_churn_nodes(), rate=1.0 / 60.0,
+                                     horizon=2000.0, seed=0,
+                                     mean_down=45.0)
+
+    def replay(trace):
+        return ClusterSim(_churn_nodes(), engine="fused").run(
+            _churn_jobs(n_jobs, seed=0, parents_every=3),
+            RetrySpec("ksplus"), faults=churn, trace=trace)
+
+    replay(False)  # warm the shared programs once
+    obs.clear()
+    obs.REGISTRY.clear()
+    # Paired-ratio median: runner-load drift between replays dwarfs the
+    # tracing delta, so time off/on back-to-back, take each pair's
+    # ratio, and gate on the median — pairing cancels the drift, the
+    # median rejects the outliers a min-of-N would anchor on.  GC is
+    # held off during the timed region: the traced replay's extra
+    # allocations otherwise pull collector passes into its half of the
+    # pair, and late in a long bench process (big gen2 heap) those
+    # pauses double the apparent overhead.
+    pairs = []
+    offs, ons = [], []
+    gc.collect()
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(7):
+            t0 = time.perf_counter()
+            pres = replay(False)
+            offs.append(time.perf_counter() - t0)
+            obs.clear()
+            obs.REGISTRY.clear()
+            t0 = time.perf_counter()
+            tres = replay(True)
+            ons.append(time.perf_counter() - t0)
+            pairs.append(ons[-1] / offs[-1])
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+        gc.collect()
+    us_off = min(offs) * 1e6
+    us_on = min(ons) * 1e6
+    overhead = sorted(pairs)[len(pairs) // 2]
+    assert pres.placements == tres.placements, \
+        "tracing perturbed placements"
+    assert pres.total_wastage_gbs == tres.total_wastage_gbs
+    assert overhead <= 1.10, \
+        f"tracing overhead {overhead:.3f}x the untraced replay " \
+        f"(budget: <=3% steady-state, 10% in-bench ceiling)"
+
+    # A traced serve burst rides the same ring/registry.
+    clock = [0.0]
+    srv = build_server(tenants=4, clock=lambda: clock[0])
+    tape = request_tape(512, tenants=4, seed=7, repeat_pool=64)
+    with obs.tracing():
+        _run_tape(srv, tape)
+
+    n_events = obs.write_chrome_trace("obs_trace.perfetto.json")
+    obs.write_prometheus("obs_metrics.prom")
+    obs.write_metrics_snapshot("obs_metrics.json")
+    with open("obs_trace.perfetto.json") as f:
+        doc = json.load(f)
+    trace_valid = (isinstance(doc.get("traceEvents"), list)
+                   and len(doc["traceEvents"]) == n_events
+                   and all("ph" in ev and "ts" in ev and "name" in ev
+                           for ev in doc["traceEvents"]))
+    rt = obs.read_events("obs_trace.perfetto.json")
+    summary = obs.summarize(rt)
+    summarize_ok = ("cluster.run" in summary
+                    and "admission.drain" in summary
+                    and len(rt) == n_events)
+    drains = obs.REGISTRY.hist("admission.drain.lanes",
+                               buckets=obs.metrics.COUNT_BUCKETS).count()
+
+    _row("obs_overhead", us_on,
+         f"{overhead:.3f}x untraced ({n_jobs}-job churn replay, "
+         f"{n_events} trace events, {drains} drains)")
+    _row("obs_untraced_us", us_off,
+         f"makespan {pres.makespan:.0f}s, {pres.retries} retries")
+    with open("BENCH_obs.json", "w") as f:
+        json.dump({
+            "schema": 1,
+            "obs_replay_jobs": n_jobs,
+            "obs_overhead_x": overhead,
+            "obs_untraced_us": us_off,
+            "obs_traced_us": us_on,
+            "obs_bitwise": True,
+            "obs_trace_events": n_events,
+            "obs_trace_valid_ok": bool(trace_valid),
+            "obs_summarize_ok": bool(summarize_ok),
+            "obs_serve_requests": len(tape),
         }, f, indent=1)
 
 
@@ -1068,6 +1202,7 @@ BENCHES = {
     "drain": bench_drain,
     "churn_replay": bench_churn_replay,
     "serve": bench_serve,
+    "obs": bench_obs,
     "kernels": bench_kernels,
     "roofline": bench_roofline_summary,
 }
@@ -1098,6 +1233,7 @@ def main() -> None:
         except (OSError, json.JSONDecodeError):
             dump = {}
     dump.update({name: us for name, us, _ in RESULTS})
+    dump["schema"] = 1
     with open(args.json, "w") as f:
         json.dump(dump, f, indent=1)
 

@@ -37,6 +37,11 @@ _compile_count = 0
 _listener_registered = False
 _dispatches: Counter = Counter()
 
+# Optional observer installed by repro.obs.trace.enable(): called as
+# hook(tag, n) after every record_dispatch.  None (one pointer check)
+# whenever tracing is off; contracts never imports repro.obs.
+_obs_dispatch_hook = None
+
 
 def _ensure_listener() -> None:
     global _listener_registered
@@ -61,6 +66,8 @@ def record_dispatch(tag: str, n: int = 1) -> None:
     Unconditional and cheap; budgets read the counter deltas.
     """
     _dispatches[tag] += n
+    if _obs_dispatch_hook is not None:
+        _obs_dispatch_hook(tag, n)
 
 
 def compile_count() -> int:

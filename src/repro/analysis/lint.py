@@ -84,6 +84,8 @@ class LintConfig:
         ("ElasticPlanner", "drain"),
         (None, "simulate_fleet_many"),
         (None, "process_job_run"),
+        ("MicroBatcher", "submit"),
+        ("MicroBatcher", "_flush"),
     )
     # Path fragments exempt from hot-path rules (bench/warmup/tests).
     allow_paths: tuple = ("benchmarks/", "tests/", "launch/")

@@ -504,3 +504,69 @@ def _has_raw_len(alloc_call: ast.Call) -> bool:
                 return True
         stack.extend(ast.iter_child_nodes(node))
     return False
+
+
+# ---------------------------------------------------------------------------
+# rule 6: unguarded obs in hot path
+
+
+# Module aliases the instrumentation convention imports observability
+# under (``from repro.obs import trace as _obs`` / ``metrics as _met``)
+# and the recording entry points that allocate when tracing is on.
+_OBS_ROOTS = {"obs", "trace", "metrics", "_obs", "_met"}
+_OBS_CALLS = {"span", "instant", "counter", "gauge", "hist", "series"}
+
+
+@rule("unguarded-obs-in-hot-path")
+def unguarded_obs_in_hot_path(ctx: LintContext):
+    """A span/metric call reachable from the hot-path entry points that
+    is not behind the module-level ``enabled`` guard.  The observability
+    contract is that the disabled path is ONE attribute check — an
+    unguarded ``_obs.span(...)`` or ``_met.counter(...)`` allocates and
+    locks on every event even with tracing off."""
+    reachable = _reachable_functions(ctx)
+    cfg = ctx.config
+    for m in ctx.models:
+        if "repro/obs/" in m.path.replace("\\", "/"):
+            continue  # the subsystem itself guards internally
+        if any(frag in m.path for frag in cfg.allow_paths):
+            continue
+        guarded = _enabled_guarded_lines(m)
+        for fi in m.functions.values():
+            if fi.name not in reachable:
+                continue
+            if any(fi.name.startswith(p) for p in cfg.allow_funcs):
+                continue
+            for node in iter_scope(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                dn = dotted_name(node.func)
+                if dn is None or "." not in dn:
+                    continue
+                if (dn.split(".")[0] not in _OBS_ROOTS
+                        or tail_name(node.func) not in _OBS_CALLS):
+                    continue
+                if node.lineno in guarded:
+                    continue
+                yield Finding(
+                    rule="unguarded-obs-in-hot-path", path=m.path,
+                    line=node.lineno,
+                    message=f"`{dn}(...)` in hot-path function "
+                            f"`{fi.name}` is not behind the module-level "
+                            f"enabled guard — wrap it in `if "
+                            f"_obs.enabled:` so the disabled path stays "
+                            f"a single attribute check")
+
+
+def _enabled_guarded_lines(m: ModuleModel) -> set[int]:
+    """Lines inside an ``if ...enabled...:`` guard (the obs convention:
+    ``if _obs.enabled:`` around every hot-path span/metric call)."""
+    guarded: set[int] = set()
+    for node in ast.walk(m.tree):
+        if isinstance(node, (ast.If, ast.IfExp)):
+            test_names = {dotted_name(n) or "" for n in ast.walk(node.test)
+                          if isinstance(n, (ast.Name, ast.Attribute))}
+            if any(t.endswith("enabled") for t in test_names):
+                guarded.update(range(
+                    node.lineno, (node.end_lineno or node.lineno) + 1))
+    return guarded

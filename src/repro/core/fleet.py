@@ -39,6 +39,7 @@ from repro.analysis.contracts import record_dispatch
 from repro.core import envelope as _env
 from repro.core.allocation import AllocationPlan
 from repro.core.envelope import PackedEnvelopes, RetrySpec
+from repro.obs import trace as _obs
 
 __all__ = [
     "RetrySpec",
@@ -710,6 +711,26 @@ def simulate_fleet_many(
     Per-call overhead (~0.5 ms) therefore amortizes over *all* methods and
     buckets instead of multiplying into them.
     """
+    if _obs.enabled:
+        with _obs.span("fleet.simulate_many", jobs=len(jobs)):
+            return _simulate_fleet_many_impl(
+                jobs, mems, dt, machine_memory=machine_memory,
+                max_attempts=max_attempts, backend=backend, k=k)
+    return _simulate_fleet_many_impl(
+        jobs, mems, dt, machine_memory=machine_memory,
+        max_attempts=max_attempts, backend=backend, k=k)
+
+
+def _simulate_fleet_many_impl(
+    jobs: Sequence,
+    mems: Union[FleetBatch, PackedTraces, Sequence[np.ndarray]],
+    dt: float = 1.0,
+    *,
+    machine_memory: float = np.inf,
+    max_attempts: int = 25,
+    backend: str = "auto",
+    k: int | None = None,
+) -> List[FleetResult]:
     batch = _as_batch(mems)
     B = batch.n
     norm = []

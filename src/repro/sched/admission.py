@@ -78,6 +78,8 @@ import numpy as np
 
 from repro.analysis.contracts import record_dispatch
 from repro.core.envelope import fits_column
+from repro.obs import metrics as _met
+from repro.obs import trace as _obs
 
 __all__ = ["AdmissionState"]
 
@@ -816,6 +818,21 @@ class AdmissionState:
         (nodes x queue) matrix itself, and its fits stay inside the
         ``shard_map``.
         """
+        if _obs.enabled:
+            q = int(np.asarray(lanes).size)
+            with _obs.span("admission.drain", backend=self.backend,
+                           q=q) as sp:
+                out = self._drain(now, lanes, select)
+                sp.add(placed=len(out))
+                _met.hist("admission.drain.lanes",
+                          buckets=_met.COUNT_BUCKETS).observe(q)
+                _met.hist("admission.drain.placed",
+                          buckets=_met.COUNT_BUCKETS).observe(len(out))
+            return out
+        return self._drain(now, lanes, select)
+
+    def _drain(self, now: float, lanes: Sequence[int],
+               select: str) -> List[tuple]:
         if select not in ("first", "headroom"):
             raise ValueError(f"unknown drain select rule: {select!r}")
         self.sync_now(now)

@@ -111,6 +111,8 @@ import numpy as np
 
 from repro.analysis.contracts import record_dispatch
 from repro.core import AllocationPlan, alloc_at, first_violation
+from repro.obs import metrics as _met
+from repro.obs import trace as _obs
 from repro.core.envelope import (
     PAD_START,
     OffsetCandidate,
@@ -433,9 +435,16 @@ class ClusterSim:
             offsets: Union[None, str, Dict[str, OffsetCandidate],
                            Sequence[OffsetCandidate]] = None,
             faults: Union[None, FaultSchedule,
-                          Sequence[FaultEvent]] = None
+                          Sequence[FaultEvent]] = None,
+            trace: bool = False
             ) -> Union[ClusterResult, List[ClusterResult]]:
         """Replay ``jobs`` through the cluster; see the module docstring.
+
+        ``trace=True`` scope-enables :mod:`repro.obs` tracing for the
+        replay (restoring the previous state afterwards); when tracing
+        is already enabled the replay is spanned either way.  Tracing
+        only observes — placements/retries/evictions are bitwise
+        identical traced or untraced (``tests/test_obs.py``).
 
         Without ``offsets`` returns one :class:`ClusterResult` and mutates
         the ``Job`` objects (attempts / wasted_gbs / plan) like the legacy
@@ -456,6 +465,17 @@ class ClusterSim:
         engines replay it identically — evictions, requeue-with-backoff,
         doomed-descendant accounting and starvation parking included.
         """
+        if trace and not _obs.enabled:
+            with _obs.tracing():
+                return self.run(jobs, retry, offsets, faults)
+        if _obs.enabled:
+            with _obs.span("cluster.run", engine=self.engine,
+                           drain=self.drain, jobs=len(jobs)):
+                return self._run_impl(jobs, retry, offsets, faults)
+        return self._run_impl(jobs, retry, offsets, faults)
+
+    def _run_impl(self, jobs: List[Job], retry, offsets, faults
+                  ) -> Union[ClusterResult, List[ClusterResult]]:
         faults = _norm_faults(faults)
         self._validate_submit(jobs)
         if self.engine == "legacy":
@@ -1434,6 +1454,13 @@ class ClusterSim:
                 queue.push_front(parked)
                 parked.clear()
 
+        if _obs.enabled:
+            # Resolve the engine series once — the registry lookup (lock
+            # + dict get) is too costly to repeat on every event batch.
+            _s_wastage = _met.series("cluster.wastage_gbs")
+            _s_util = _met.series("cluster.utilization")
+            _s_starve = _met.series("cluster.starvation_s")
+
         try_admit(0.0)
         guard = 0
         while events:
@@ -1480,6 +1507,15 @@ class ClusterSim:
                     process_join(t, batch[i][3], batch[i][4])
                     i += 1
                     try_admit(t)
+
+            if _obs.enabled:
+                # Per-event-batch engine series keyed by sim time — the
+                # curves ROADMAP items 2/5 (online selection) read back.
+                _s_wastage.append(t, float(wasted.sum()))
+                _s_util.append(t, area_used / max(
+                    cap_integral + cap_sum * (t - cap_last), 1e-9))
+                _s_starve.append(t, starvation_s)
+                _obs.instant("cluster.event_batch", t=t, n=len(batch))
 
         for ji in parked:
             starvation_s += last_t - park_t.pop(ji)

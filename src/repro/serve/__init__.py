@@ -18,7 +18,7 @@ Layers: :mod:`~repro.serve.batcher` (coalescing queue),
 """
 
 from repro.serve.batcher import (Backpressure, MicroBatcher, ServeFuture,
-                                 ServeRequest)
+                                 ServeRequest, ServerClosed)
 from repro.serve.cache import CacheStats, PredictionCache, ProgramCache
 from repro.serve.server import (EvaluateResult, PredictionServer,
                                 ServeClient, TuneResult)
@@ -27,6 +27,7 @@ from repro.serve.tenants import (ModelSnapshot, TenantRegistry,
 
 __all__ = [
     "Backpressure",
+    "ServerClosed",
     "MicroBatcher",
     "ServeFuture",
     "ServeRequest",

@@ -32,12 +32,23 @@ import dataclasses
 import threading
 from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["Backpressure", "ServeFuture", "ServeRequest", "MicroBatcher"]
+from repro.obs import metrics as _met
+from repro.obs import trace as _obs
+
+__all__ = ["Backpressure", "ServerClosed", "ServeFuture", "ServeRequest",
+           "MicroBatcher"]
 
 
 class Backpressure(RuntimeError):
     """The service queue is saturated (``max_queue`` pending requests);
     the request was rejected, not queued."""
+
+
+class ServerClosed(RuntimeError):
+    """The batcher/server was closed: the request was not (and will
+    never be) dispatched.  Raised by ``submit`` after ``close()`` and
+    set on every future still queued at close time — callers blocked in
+    ``result()`` fail fast instead of hanging."""
 
 
 class ServeFuture:
@@ -129,6 +140,7 @@ class MicroBatcher:
         self._queue: List[ServeRequest] = []
         self._thread: Optional[threading.Thread] = None
         self._running = False
+        self._closed = False
         self.stats: Dict[str, int] = {
             "submitted": 0, "rejected": 0, "flushes": 0,
             "deadline_flushes": 0, "full_flushes": 0,
@@ -145,6 +157,10 @@ class MicroBatcher:
         """
         req.key = self._key(req)
         with self._lock:
+            if self._closed:
+                raise ServerClosed(
+                    f"serve front closed; request "
+                    f"{req.kind}/{req.tenant}/{req.family} rejected")
             if len(self._queue) >= self.max_queue:
                 self.stats["rejected"] += 1
                 raise Backpressure(
@@ -158,6 +174,8 @@ class MicroBatcher:
             full = depth >= self.max_batch
             if full or self._thread is not None:
                 self._wake.notify()
+            if _obs.enabled:
+                _met.gauge("serve.queue_depth").set(depth)
         if full:
             self._flush(kind="full_flushes")
         return req.future
@@ -197,19 +215,34 @@ class MicroBatcher:
                 return 0
             self.stats["flushes"] += 1
             self.stats[kind] += 1
+        if _obs.enabled:
+            _met.counter("serve.flushes").inc(cause=kind)
+            _met.hist("serve.batch_size",
+                      buckets=_met.COUNT_BUCKETS).observe(len(batch))
+            now = self.clock()
+            wait_h = _met.hist("serve.wait_s")
+            for req in batch:
+                wait_h.observe(now - req.arrival)
         buckets: Dict[Any, List[ServeRequest]] = {}
         for req in batch:  # insertion order: FIFO within a bucket
             buckets.setdefault(req.key, []).append(req)
         for key, reqs in buckets.items():
-            try:
-                self._dispatch(key, reqs)
-            except BaseException as exc:  # scatter failures, keep serving
-                for r in reqs:
-                    if not r.future.done:
-                        r.future.set_exception(exc)
+            if _obs.enabled:
+                with _obs.span("serve.dispatch", n=len(reqs)):
+                    self._dispatch_bucket(key, reqs)
+            else:
+                self._dispatch_bucket(key, reqs)
             self.stats["batches"] += 1
             self.stats["dispatched"] += len(reqs)
         return len(batch)
+
+    def _dispatch_bucket(self, key, reqs: List[ServeRequest]) -> None:
+        try:
+            self._dispatch(key, reqs)
+        except BaseException as exc:  # scatter failures, keep serving
+            for r in reqs:
+                if not r.future.done:
+                    r.future.set_exception(exc)
 
     # ------------------------------------------------------- threaded front
     def start(self) -> None:
@@ -231,6 +264,33 @@ class MicroBatcher:
         self._thread.join()
         self._thread = None
         self.flush()
+
+    def close(self) -> None:
+        """Shut down without dispatching: stop the pump thread and fail
+        every still-queued request with :class:`ServerClosed`.
+
+        The counterpart to :meth:`stop` (which drains): ``close`` is the
+        abandon-ship path — callers blocked in ``result()`` get the
+        error immediately instead of hanging on a future no thread will
+        ever resolve, and later ``submit`` calls are rejected.
+        Idempotent.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._running = False
+            self._wake.notify()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join()
+        with self._lock:
+            pending, self._queue = self._queue, []
+        for r in pending:
+            if not r.future.done:
+                r.future.set_exception(ServerClosed(
+                    f"serve front closed with request "
+                    f"{r.kind}/{r.tenant}/{r.family} still queued"))
 
     def _run(self) -> None:
         while True:

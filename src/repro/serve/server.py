@@ -44,6 +44,8 @@ import numpy as np
 
 from repro.analysis.contracts import record_dispatch
 from repro.core import registry
+from repro.obs import metrics as _met
+from repro.obs import trace as _obs
 from repro.core.allocation import AllocationPlan
 from repro.core.envelope import OffsetCandidate, apply_offsets
 from repro.core.fleet import (bucket_traces, packed_predict, pad_lane_axis,
@@ -177,6 +179,21 @@ class PredictionServer:
         self._batcher.stop()
         self._threaded = False
 
+    def close(self) -> None:
+        """Shut down: stop the pump thread and fail still-queued
+        requests with :class:`repro.serve.batcher.ServerClosed` instead
+        of letting their callers hang (``stop`` drains; ``close``
+        abandons).  Idempotent; later submits are rejected."""
+        self._batcher.close()
+        self._threaded = False
+
+    def __enter__(self) -> "PredictionServer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     @property
     def threaded(self) -> bool:
         return self._threaded
@@ -193,9 +210,14 @@ class PredictionServer:
         if kind == "predict" and self.predictions is not None:
             hit = self.predictions.get(snap.sid, payload)
             if hit is not None:
+                if _obs.enabled:
+                    _met.counter("serve.requests").inc(kind=kind,
+                                                       cache="hit")
                 fut = ServeFuture()
                 fut.set_result(hit)
                 return fut
+        if _obs.enabled:
+            _met.counter("serve.requests").inc(kind=kind, cache="miss")
         req = ServeRequest(kind=kind, tenant=tenant, family=family,
                            payload=payload, arrival=self.clock())
         req.snapshot = snap

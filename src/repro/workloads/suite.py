@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as _obs
 from repro.workloads import scenarios as _scen
 from repro.workloads.arrivals import diurnal_arrivals, poisson_arrivals
 
@@ -133,8 +134,13 @@ def run_suite(cases: Sequence[SuiteCase], nodes=None, retry=None,
         fleet = fresh_fleet()
         jobs = _case_jobs(case, nt)
         faults = _case_faults(case, fleet)
-        res = ClusterSim(fleet, engine=engine).run(jobs, retry,
-                                                   faults=faults)
+        if _obs.enabled:
+            with _obs.span("suite.case", case=case.name, jobs=len(jobs)):
+                res = ClusterSim(fleet, engine=engine).run(jobs, retry,
+                                                           faults=faults)
+        else:
+            res = ClusterSim(fleet, engine=engine).run(jobs, retry,
+                                                       faults=faults)
         if check_oracle:
             oracle = ClusterSim(fresh_fleet(), engine="legacy").run(
                 _case_jobs(case, nt), ksplus_retry, faults=faults)

@@ -425,7 +425,7 @@ class TestDogfood:
         out = capsys.readouterr().out
         for rule_name in ("use-after-donation", "host-sync-in-hot-path",
                           "x64-scope", "tracer-unsafe-control-flow",
-                          "recompile-hazard"):
+                          "recompile-hazard", "unguarded-obs-in-hot-path"):
             assert rule_name in out
 
     def test_new_finding_fails_the_gate(self, tmp_path, monkeypatch):
@@ -445,3 +445,64 @@ def simulate_fleet_many(x):
         monkeypatch.chdir(tmp_path)
         rc = lint_main([str(p), "--baseline", str(tmp_path / "none.json")])
         assert rc == 1
+
+
+# ---------------------------------------------------- unguarded-obs-in-hot-path
+_OBS_CFG = LintConfig(entry_points=((None, "loop"),), allow_paths=(),
+                      allow_funcs=("bench_",))
+
+
+class TestUnguardedObsInHotPath:
+    SRC = """
+from repro.obs import metrics as _met
+from repro.obs import trace as _obs
+
+def helper():
+    _obs.instant("tick")          # reachable via loop -> flagged
+
+def loop(x):
+    helper()
+    with _obs.span("work"):       # unguarded -> flagged
+        x = x + 1
+    if _obs.enabled:
+        _met.counter("c").inc()   # guarded -> clean
+        with _obs.span("ok") as sp:
+            sp.add(n=1)
+    return x
+
+def unreachable(x):
+    _met.gauge("g").set(x)        # not in the hot path -> silent
+
+def bench_loop(x):
+    _obs.instant("bench")         # allow_funcs prefix -> silent
+"""
+
+    def test_unguarded_calls_flagged_guarded_clean(self, tmp_path):
+        active, _ = _lint_src(tmp_path, self.SRC, config=_OBS_CFG)
+        found = _by_rule(active, "unguarded-obs-in-hot-path")
+        msgs = sorted(f.message for f in found)
+        assert len(found) == 2, msgs
+        assert any("_obs.instant" in m and "helper" in m for m in msgs)
+        assert any("_obs.span" in m and "loop" in m for m in msgs)
+
+    def test_obs_subsystem_itself_exempt(self, tmp_path):
+        sub = tmp_path / "repro" / "obs"
+        sub.mkdir(parents=True)
+        p = sub / "trace.py"
+        p.write_text("""
+def span(name):
+    import trace
+    trace.instant("self")
+""")
+        active, _, _ = run_lint([str(p)], config=_OBS_CFG)
+        assert _by_rule(active, "unguarded-obs-in-hot-path") == []
+
+    def test_dogfooded_instrumentation_is_guarded(self):
+        """The repo's own hot-path instrumentation must satisfy the rule
+        it ships — the shipped entry points cover cluster/admission/
+        fleet/serve."""
+        paths = [os.path.join(REPO_ROOT, "src", "repro", p) for p in
+                 ("sched/cluster.py", "sched/admission.py",
+                  "core/fleet.py", "serve/batcher.py", "serve/server.py")]
+        active, _, _ = run_lint(paths)
+        assert _by_rule(active, "unguarded-obs-in-hot-path") == []

@@ -114,3 +114,24 @@ class TestEndToEnd:
             "--fresh", str(fresh)])
         with pytest.raises(SystemExit, match="no BENCH"):
             main()
+
+
+class TestMetadataKeys:
+    def test_schema_key_is_never_gated_or_noted(self):
+        failures, notes = compare(
+            _kv(schema=1, drain_speedup_x=10.0),
+            _kv(schema=2, drain_speedup_x=10.0), tolerance=0.2)
+        assert failures == []
+        assert notes == []  # no "new key" / "missing" chatter either
+
+    def test_schema_only_in_fresh_is_silent(self):
+        """Dumps gaining the stamp must not spam the notes list."""
+        failures, notes = compare(_kv(x_speedup_x=1.0),
+                                  _kv(x_speedup_x=1.0, schema=1),
+                                  tolerance=0.2)
+        assert failures == [] and notes == []
+
+    def test_schema_only_in_baseline_is_silent(self):
+        failures, notes = compare(_kv(x_speedup_x=1.0, schema=1),
+                                  _kv(x_speedup_x=1.0), tolerance=0.2)
+        assert failures == [] and notes == []

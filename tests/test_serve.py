@@ -23,6 +23,7 @@ from repro.serve import (
     PredictionServer,
     ProgramCache,
     ServeRequest,
+    ServerClosed,
     TenantRegistry,
     UnknownFamilyError,
     UnknownTenantError,
@@ -359,3 +360,135 @@ class TestServeDispatch:
             t.join()
         srv.stop()
         assert not errors
+
+
+class TestShutdownAndLiveness:
+    """``close()`` semantics and the refit-vs-predict liveness contract:
+    shutdown never strands a blocked caller, and concurrent refits never
+    leave the prediction/program caches pointing at dead snapshots."""
+
+    def test_close_fails_queued_futures(self):
+        bat = MicroBatcher(lambda key, reqs: None, lambda r: r.family,
+                           max_wait_s=10.0)
+        futs = [bat.submit(_req(float(i), t=0.0)) for i in range(3)]
+        bat.close()
+        for f in futs:
+            assert f.done
+            with pytest.raises(ServerClosed, match="still queued"):
+                f.result(0)
+
+    def test_submit_after_close_rejected(self):
+        bat = MicroBatcher(lambda key, reqs: None, lambda r: r.family)
+        bat.close()
+        with pytest.raises(ServerClosed, match="rejected"):
+            bat.submit(_req(1.0))
+
+    def test_close_stops_pump_thread_and_is_idempotent(self):
+        bat = MicroBatcher(lambda key, reqs: None, lambda r: r.family,
+                           max_wait_s=10.0)
+        bat.start()
+        fut = bat.submit(_req(1.0, t=time.monotonic()))
+        bat.close()
+        assert bat._thread is None
+        with pytest.raises(ServerClosed):
+            fut.result(0)
+        bat.close()  # second close is a no-op, not an error
+
+    def test_stop_drains_close_abandons(self):
+        served = []
+        bat = MicroBatcher(
+            lambda key, reqs: [r.future.set_result(served.append(r.payload))
+                               for r in reqs],
+            lambda r: r.family, max_wait_s=10.0)
+        bat.start()
+        bat.submit(_req(1.0, t=time.monotonic()))
+        bat.stop()  # stop flushes what is pending
+        assert served == [1.0]
+        bat.submit(_req(2.0, t=time.monotonic()))
+        bat.close()  # close drops it
+        assert served == [1.0]
+
+    def test_blocked_caller_unblocked_by_close(self):
+        """A caller waiting in result() gets ServerClosed, not a hang."""
+        bat = MicroBatcher(lambda key, reqs: None, lambda r: r.family,
+                           max_wait_s=60.0)
+        fut = bat.submit(_req(1.0, t=time.monotonic()))
+        caught = []
+
+        def waiter():
+            try:
+                fut.result(30.0)
+            except BaseException as exc:
+                caught.append(exc)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.05)  # let the waiter block on the future
+        bat.close()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+        assert len(caught) == 1 and isinstance(caught[0], ServerClosed)
+
+    def test_server_context_manager_closes(self):
+        with build_server(tenants=1, seed=0) as srv:
+            assert srv.client("tenant0").predict("align", 1.5).peaks.size
+        with pytest.raises(ServerClosed):
+            srv.submit("predict", "tenant0", "align", 9.9)
+
+    def test_threaded_refit_vs_predict_liveness(self):
+        """Tenant refits race reader predictions on the live thread; the
+        copy-on-refit snapshots keep readers on their seed sid, and at
+        quiescence every cached prediction belongs to a live snapshot."""
+        srv = build_server(tenants=4, batching=True, seed=0,
+                           max_wait_s=0.001)
+        srv.start()
+        errors: list = []
+        stop_evt = threading.Event()
+        seed_sid = srv.tenants.snapshot("tenant1", "align").sid
+
+        def reader(i):
+            try:
+                c = srv.client(f"tenant{i}")
+                while not stop_evt.is_set():
+                    p = c.predict("align", 1.0 + 0.1 * (i % 8))
+                    assert p.peaks.size > 0
+            except BaseException as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        def writer():
+            try:
+                c = srv.client("tenant0")
+                for j in range(8):
+                    c.observe("align", ExecutionOutcome(
+                        mem=np.full(40, 5.0 + j), dt=1.0, input_gb=2.0,
+                        succeeded=True))
+                    assert c.refit("align") is True
+                    assert c.predict("align", 2.0).peaks.size > 0
+            except BaseException as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        readers = [threading.Thread(target=reader, args=(i,))
+                   for i in (1, 2, 3)]
+        wt = threading.Thread(target=writer)
+        for t in readers:
+            t.start()
+        wt.start()
+        wt.join(timeout=30.0)
+        stop_evt.set()
+        for t in readers:
+            t.join(timeout=30.0)
+        srv.stop()
+        assert not errors
+        assert not wt.is_alive() and not any(t.is_alive() for t in readers)
+        # Readers stayed on the seed snapshot; the writer moved off it.
+        for i in (1, 2, 3):
+            assert srv.tenants.snapshot(f"tenant{i}", "align").sid == seed_sid
+        assert srv.tenants.snapshot("tenant0", "align").sid != seed_sid
+        # Quiescent cache invariant: every cached sid is still served by
+        # some tenant — refit invalidation left no dead-snapshot entries.
+        with srv.predictions._lock:
+            cached_sids = [sid for sid, keys in
+                           srv.predictions._by_sid.items() if keys]
+        assert cached_sids
+        for sid in cached_sids:
+            assert srv._sid_live(sid), f"dead snapshot {sid} still cached"
